@@ -1,0 +1,39 @@
+"""Shared benchmark utilities."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Hardware constants (TPU v5e target; used for roofline + modeled energy)
+PEAK_FLOPS_BF16 = 197e12      # per chip
+PEAK_FLOPS_F32 = 98.5e12      # MXU f32 ~ half of bf16
+HBM_BW = 819e9                # bytes/s per chip
+ICI_BW = 50e9                 # bytes/s per link (~per chip, 1 link budget)
+CHIP_POWER_W = 170.0          # v5e-ish board power
+A100_POWER_W = 250.0          # paper Table 3 comparison point
+M4PRO_POWER_W = 40.0          # paper's CPU TDP
+
+
+def time_fn(fn, *args, repeats: int = 20, warmup: int = 3) -> float:
+    """Median wall seconds per call of a jitted fn."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def gflops(nnz: int, n: int, seconds: float) -> float:
+    return 2.0 * nnz * n / seconds / 1e9
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

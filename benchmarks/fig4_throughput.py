@@ -1,0 +1,95 @@
+"""Paper Fig. 4: SpMM throughput (GFLOPS), FP64 and FP32, LOOPS vs CPU
+baselines across the Table-2-like suite.
+
+Baselines (implemented, per assignment scope):
+  * taco-like   — row-wise CSR schedule in pure XLA (segment-sum), the
+                  schedule TACO emits for CSR SpMM;
+  * armadillo-like — dense GEMM on the densified operand (Armadillo stores
+                  sparse, but its SpMM lowers to generic kernels; the dense
+                  GEMM is the upper-bound-friendly stand-in).
+
+Container caveat (recorded in EXPERIMENTS.md): wall-clock numbers are
+CPU-XLA proxies — this machine has ONE homogeneous engine, so the paper's
+heterogeneous-engine speedup mechanism cannot appear in wall-clock; what IS
+reproducible here is the *adaptive scheduling* claim: the calibrated perf
+model (Eq. 2) discovers the machine's best split per matrix (on CPU that is
+usually CSR-heavy; on the TPU target the roofline terms in §Roofline carry
+the perf claim).  The Pallas kernels are TPU-targeted and validated in
+interpret mode.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (csr_to_dense, loops_from_csr, loops_spmm,
+                        plan_and_convert, spmm_csr_baseline,
+                        spmm_dense_baseline, suite)
+from repro.core.partition import choose_r_boundary
+from repro.core.perf_model import calibrate
+
+from ._util import csv_row, gflops, time_fn
+
+N = 32  # paper fixes N=32
+MATRICES = ["m6", "m8", "m9", "m10", "m12", "m13", "m14", "m16", "m17", "m19"]
+
+
+def calibrated_plan(csr, b, total: int = 4):
+    """Paper §3.5: fit Eq. 2 from warm-up runs of candidate splits, then
+    argmax (Eq. 3) -> boundary (Eq. 1)."""
+    def measure(x, y):
+        r = choose_r_boundary(csr.nrows, 1.0, 4.0, max(x, 0), max(y, 0),
+                              br=8)
+        fmt = loops_from_csr(csr, r, 8)
+        f = jax.jit(lambda bb: loops_spmm(fmt, bb, backend="jnp"))
+        return 1.0 / time_fn(f, b, repeats=2, warmup=1)
+
+    model = calibrate(measure, total=total)
+    return plan_and_convert(csr, total_workers=total, model=model)
+
+
+def run(dtype=np.float32, scale_rows: int = 1024, out=print):
+    name_dt = {np.float32: "fp32", np.float64: "fp64"}[dtype]
+    if dtype == np.float64:
+        jax.config.update("jax_enable_x64", True)
+    try:
+        rng = np.random.default_rng(0)
+        rows = []
+        for mid in MATRICES:
+            csr = suite.table2_like(mid, scale_rows=scale_rows, seed=3,
+                                    dtype=dtype)
+            nnz = csr.nnz
+            b = jnp.asarray(rng.standard_normal((csr.shape[1], N)), dtype)
+            fmt, plan = calibrated_plan(csr, b)
+            dense = jnp.asarray(csr_to_dense(csr))
+
+            f_loops = jax.jit(lambda bb: loops_spmm(fmt, bb, backend="jnp"))
+            f_taco = jax.jit(lambda bb: spmm_csr_baseline(csr, bb))
+            f_arma = jax.jit(lambda bb: spmm_dense_baseline(dense, bb))
+
+            t_loops = time_fn(f_loops, b)
+            t_taco = time_fn(f_taco, b)
+            t_arma = time_fn(f_arma, b)
+            g = gflops(nnz, N, t_loops)
+            out(csv_row(f"fig4_{name_dt}_{mid}_{suite.TABLE2_STATS[mid].name}",
+                        t_loops * 1e6,
+                        f"GFLOPS={g:.2f};vs_taco={t_taco / t_loops:.2f}x;"
+                        f"vs_dense={t_arma / t_loops:.2f}x"))
+            rows.append((t_taco / t_loops, t_arma / t_loops))
+        sp = np.array(rows)
+        out(csv_row(f"fig4_{name_dt}_geomean", 0.0,
+                    f"speedup_vs_taco={np.exp(np.log(sp[:, 0]).mean()):.2f}x;"
+                    f"speedup_vs_dense={np.exp(np.log(sp[:, 1]).mean()):.2f}x"))
+    finally:
+        if dtype == np.float64:
+            jax.config.update("jax_enable_x64", False)
+
+
+def main(out=print):
+    run(np.float32, out=out)
+    run(np.float64, out=out)
+
+
+if __name__ == "__main__":
+    main()

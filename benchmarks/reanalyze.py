@@ -1,0 +1,35 @@
+"""Re-run the HLO analyzer over cached .hlo.txt dry-run artifacts and update
+the JSON records in place (analyzer improvements shouldn't need recompiles)."""
+import glob
+import json
+import os
+import sys
+
+from repro.perf.hlo_analysis import analyze_hlo
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+
+def main():
+    n = 0
+    for jpath in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
+        hpath = jpath.replace(".json", ".hlo.txt")
+        if not os.path.exists(hpath):
+            continue
+        rec = json.load(open(jpath))
+        st = analyze_hlo(open(hpath).read())
+        rec["hlo"].update({
+            "flops_per_device": st.flops,
+            "hbm_bytes_per_device": st.hbm_bytes,
+            "collective_bytes_per_device": st.collective_bytes,
+            "collective_by_kind": st.collective_by_kind,
+            "unknown_trip_loops": st.unknown_trip_loops,
+        })
+        with open(jpath, "w") as f:
+            json.dump(rec, f, indent=1)
+        n += 1
+    print(f"reanalyzed {n} cells")
+
+
+if __name__ == "__main__":
+    main()

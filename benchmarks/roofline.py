@@ -1,0 +1,173 @@
+"""§Roofline: per (arch x shape) three-term roofline from the compiled
+dry-run artifacts (single-pod mesh).
+
+  compute term    = HLO_FLOPs_per_device / peak_FLOP/s_per_chip
+  memory term     = HLO_bytes_per_device / HBM_bw_per_chip
+  collective term = collective_bytes_per_device / link_bw
+
+HLO_* come from the trip-count-corrected HLO analyzer (repro.perf) over the
+post-SPMD per-device module, so "/ chips" is already applied.  MODEL_FLOPS
+uses 6*N*D for training cells and 2*N*D for inference cells (N = active
+params for MoE).  Emits benchmarks/results/roofline.md + CSV rows.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+import numpy as np
+
+from repro.configs import SHAPES, get_config
+
+from ._util import HBM_BW, ICI_BW, PEAK_FLOPS_BF16, csv_row
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+OUT_MD = os.path.join(os.path.dirname(__file__), "results", "roofline.md")
+
+
+def active_params(cfg) -> float:
+    """Analytic active-parameter count (MoE: top_k of the routed experts)."""
+    d, L = cfg.d_model, cfg.num_layers
+    hd = cfg.resolved_head_dim
+    attn = d * hd * (cfg.num_heads * 2 + cfg.num_kv_heads * 2)
+    if cfg.family == "moe":
+        ffn = 3 * d * cfg.moe_d_ff * cfg.top_k
+        if cfg.num_shared_experts:
+            ffn += 3 * d * cfg.d_ff + d  # shared expert + gate
+        ffn += d * cfg.num_experts  # router
+    elif cfg.family == "ssm":
+        attn = 5 * d * d + 2 * d * 32 * 5  # rwkv time-mix proj + lora approx
+        ffn = d * cfg.d_ff * 2 + d * d
+    else:
+        ffn = 3 * d * cfg.d_ff if cfg.act == "swiglu" else 2 * d * cfg.d_ff
+    if cfg.family == "hybrid":
+        attn += 2 * d * d + 2 * d * cfg.ssm_state + d * d  # mamba head
+    emb = cfg.vocab_padded() * d * (1 if cfg.tie_embeddings else 2)
+    total = L * (attn + ffn) + emb
+    if cfg.family == "audio":
+        total += (cfg.encoder_layers or L) * (attn + 2 * d * cfg.d_ff)
+    return float(total)
+
+
+def total_params(cfg) -> float:
+    if cfg.family != "moe":
+        return active_params(cfg)
+    d, L = cfg.d_model, cfg.num_layers
+    hd = cfg.resolved_head_dim
+    attn = d * hd * (cfg.num_heads * 2 + cfg.num_kv_heads * 2)
+    ffn = 3 * d * cfg.moe_d_ff * cfg.num_experts
+    if cfg.num_shared_experts:
+        ffn += 3 * d * cfg.d_ff + d
+    emb = cfg.vocab_padded() * d * 2
+    return float(L * (attn + ffn) + emb)
+
+
+def model_flops(cfg, shape) -> float:
+    n = active_params(cfg)
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n * tokens
+
+
+def advice(dom: str, shape_kind: str, cfg) -> str:
+    if dom == "compute":
+        return ("near roofline already; next wins are kernel-level (fused "
+                "attention kernel, higher MXU occupancy)")
+    if dom == "memory":
+        if shape_kind == "decode":
+            return ("decode is weight/cache-bandwidth bound: quantise KV "
+                    "cache + weights (bf16->int8) or batch more requests "
+                    "per chip")
+        return ("reduce HBM traffic: less remat recompute, fuse layout "
+                "copies, keep activations bf16")
+    return ("collective-bound: overlap reduce-scatter with microbatch "
+            "compute, int8 gradient compression, or reshard to cut "
+            "resharding copies")
+
+
+def load_cells(mesh="single", tag=""):
+    suffix = f"__{mesh}__{tag}.json" if tag else f"__{mesh}.json"
+    cells = []
+    for path in sorted(glob.glob(os.path.join(RESULTS, f"*{suffix}"))):
+        if not tag and "__opt" in path:
+            continue
+        rec = json.load(open(path))
+        if rec.get("status") == "ok":
+            cells.append(rec)
+    return cells
+
+
+def main(out=print, tag=None):
+    # prefer the optimized-defaults run when present; fall back to baseline
+    if tag is None:
+        tag = "opt" if glob.glob(os.path.join(RESULTS, "*__opt.json")) else ""
+    cells = load_cells("single", tag)
+    if not cells:
+        cells = load_cells("single", "")
+    # paper-technique cell: pick the most-optimized variant present
+    if not any(c["arch"].startswith("loops-spmm") for c in cells):
+        for t in ("spmm_opt", "spmm_sorted", "spmm_noasm", "spmm"):
+            p = os.path.join(RESULTS, f"loops-spmm__{t}__single.json")
+            if os.path.exists(p):
+                rec = json.load(open(p))
+                if rec.get("status") == "ok":
+                    cells.append(rec)
+                break
+    lines = ["| arch | shape | t_comp (s) | t_mem (s) | t_coll (s) | "
+             "dominant | roofline frac | MODEL/HLO flops | note |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for rec in cells:
+        chips = int(np.prod(list(rec["mesh_shape"].values())))
+        h = rec["hlo"]
+        if rec["arch"].startswith("loops-spmm"):
+            # the paper-technique cell: useful flops = 2 * nnz * N
+            nnz = rec.get("overrides", {}).get("nnz", 0)
+            ncols = int(rec["shape"].split("_n")[-1])
+            mf = 2.0 * nnz * ncols
+            t_comp = h["flops_per_device"] / PEAK_FLOPS_BF16
+            t_mem = h["hbm_bytes_per_device"] / HBM_BW
+            t_coll = h["collective_bytes_per_device"] / ICI_BW
+            terms = {"compute": t_comp, "memory": t_mem,
+                     "collective": t_coll}
+            dom = max(terms, key=terms.get)
+            t_step = max(terms.values())
+            # the XLA path has no MXU dots (rank-1 chains are elementwise
+            # here); useful-flops time is the honest compute term
+            t_useful = mf / chips / PEAK_FLOPS_BF16
+            lines.append(
+                f"| {rec['arch']} | {rec['shape']} | {t_useful:.3e} | "
+                f"{t_mem:.3e} | {t_coll:.3e} | {dom} | "
+                f"{t_useful / t_step if t_step else 0:.3f} | n/a | "
+                f"paper-technique cell (two-level device-group schedule; "
+                f"Pallas kernel runs ~30x less HBM traffic — §Perf) |")
+            out(csv_row(f"roofline_{rec['arch']}_{rec['shape']}",
+                        t_step * 1e6, f"dom={dom};useful_t={t_useful:.2e}"))
+            continue
+        cfg = get_config(rec["arch"])
+        shape = SHAPES[rec["shape"]]
+        t_comp = h["flops_per_device"] / PEAK_FLOPS_BF16
+        t_mem = h["hbm_bytes_per_device"] / HBM_BW
+        t_coll = h["collective_bytes_per_device"] / ICI_BW
+        terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+        dom = max(terms, key=terms.get)
+        t_step = max(terms.values())
+        frac = t_comp / t_step if t_step > 0 else 0.0
+        mf = model_flops(cfg, shape)
+        ratio = mf / max(h["flops_per_device"] * chips, 1.0)
+        lines.append(
+            f"| {rec['arch']} | {rec['shape']} | {t_comp:.3e} | {t_mem:.3e} "
+            f"| {t_coll:.3e} | {dom} | {frac:.3f} | {ratio:.3f} | "
+            f"{advice(dom, shape.kind, cfg)} |")
+        out(csv_row(f"roofline_{rec['arch']}_{rec['shape']}", t_step * 1e6,
+                    f"dom={dom};frac={frac:.3f};model_hlo_ratio={ratio:.3f}"))
+    with open(OUT_MD, "w") as f:
+        f.write("# Roofline (single-pod 16x16, v5e constants: 197 TF bf16, "
+                "819 GB/s HBM, 50 GB/s ICI)\n\n")
+        f.write("\n".join(lines) + "\n")
+    out(csv_row("roofline_table_written", 0.0, OUT_MD))
+
+
+if __name__ == "__main__":
+    main()

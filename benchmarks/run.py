@@ -1,0 +1,62 @@
+"""Benchmark orchestrator — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (and mirrors them to
+benchmarks/results/bench.csv).
+
+  fig4   — FP64/FP32 SpMM throughput vs TACO-like / Armadillo-like (Fig. 4)
+  fig5   — bf16(=FP16) SpMM vs block-only / csr-only strategies (Fig. 5)
+  sec43  — adaptive scheduling ablation (§4.3)
+  table3 — modeled energy efficiency (Table 3)
+  table4 — end-to-end GCN training (§4.5 / Table 4)
+  roofline — §Roofline terms for every dry-run cell (assignment)
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list: fig4,fig5,sec43,table3,table4,roofline")
+    args = ap.parse_args()
+
+    from . import (fig4_throughput, fig5_halfprec, roofline, sec43_scheduling,
+                   table3_energy, table4_gnn)
+    suites = {
+        "fig4": fig4_throughput.main,
+        "fig5": fig5_halfprec.main,
+        "sec43": sec43_scheduling.main,
+        "table3": table3_energy.main,
+        "table4": table4_gnn.main,
+        "roofline": roofline.main,
+    }
+    chosen = (args.only.split(",") if args.only else list(suites))
+
+    out_path = os.path.join(os.path.dirname(__file__), "results", "bench.csv")
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    rows = []
+
+    def emit(line: str):
+        print(line, flush=True)
+        rows.append(line)
+
+    emit("name,us_per_call,derived")
+    failures = 0
+    for name in chosen:
+        try:
+            suites[name](out=emit)
+        except Exception:
+            failures += 1
+            emit(f"{name}_FAILED,0,{traceback.format_exc(limit=1).strip()}")
+    with open(out_path, "w") as f:
+        f.write("\n".join(rows) + "\n")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""Paper §4.5 / Table 4: end-to-end GCN training with the LOOPS aggregation
+operator vs the dense-adjacency and CSR-baseline aggregations.
+
+A 2-layer GCN on a synthetic graph: hat(A) @ relu(hat(A) @ X W0) W1.
+Reports per-epoch time, speedups, accuracy parity (loss trajectories must
+match to fp tolerance — same math, different operator), and the
+preprocessing (format conversion) share, which the paper amortises (1.3%)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import csr_to_dense, loops_spmm, plan_and_convert, \
+    spmm_csr_baseline, suite
+
+from ._util import csv_row, time_fn
+
+GRAPHS = [("reddit-like", 2048, 24), ("amazon-like", 1024, 8),
+          ("yelp-like", 1536, 16)]
+F_IN, F_HID, F_OUT = 32, 32, 8
+
+
+def _gcn_loss(agg_fn, x, w0, w1, y):
+    h = jax.nn.relu(agg_fn(x @ w0))
+    logits = agg_fn(h @ w1)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, y[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - gold)
+
+
+def main(out=print):
+    rng = np.random.default_rng(0)
+    for name, n_nodes, deg in GRAPHS:
+        t0 = time.perf_counter()
+        adj = suite.gcn_graph(n_nodes, deg, seed=1)
+        import jax.numpy as _jnp
+        probe = _jnp.zeros((n_nodes, F_HID), _jnp.float32)
+        from .fig4_throughput import calibrated_plan
+        fmt, _ = calibrated_plan(adj, probe)
+        t_prep = time.perf_counter() - t0
+
+        dense_adj = jnp.asarray(csr_to_dense(adj))
+        x = jnp.asarray(rng.standard_normal((n_nodes, F_IN)), jnp.float32)
+        w0 = jnp.asarray(rng.standard_normal((F_IN, F_HID)) * 0.1,
+                         jnp.float32)
+        w1 = jnp.asarray(rng.standard_normal((F_HID, F_OUT)) * 0.1,
+                         jnp.float32)
+        y = jnp.asarray(rng.integers(0, F_OUT, n_nodes), jnp.int32)
+
+        agg_loops = lambda h: loops_spmm(fmt, h, backend="jnp")
+        agg_dense = lambda h: dense_adj @ h
+        agg_csr = lambda h: spmm_csr_baseline(adj, h)
+
+        grads = {}
+        times = {}
+        for tag, agg in [("loops", agg_loops), ("dense", agg_dense),
+                         ("csr", agg_csr)]:
+            step = jax.jit(jax.value_and_grad(
+                lambda w0_, w1_, _agg=agg: _gcn_loss(_agg, x, w0_, w1_, y),
+                argnums=(0, 1)))
+            times[tag] = time_fn(step, w0, w1, repeats=5)
+            grads[tag] = step(w0, w1)
+        # accuracy parity: identical losses/grads across operators
+        l_loops = float(grads["loops"][0])
+        l_dense = float(grads["dense"][0])
+        assert abs(l_loops - l_dense) < 1e-3, (l_loops, l_dense)
+        epochs_to_amortize = t_prep / max(times["loops"], 1e-9)
+        out(csv_row(f"table4_{name}", times["loops"] * 1e6,
+                    f"vs_dense={times['dense'] / times['loops']:.2f}x;"
+                    f"vs_csr={times['csr'] / times['loops']:.2f}x;"
+                    f"loss_parity={abs(l_loops - l_dense):.1e};"
+                    f"prep_amortized_over_epochs={epochs_to_amortize:.0f}"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""Step-atomic async checkpointing (topology-independent restore)."""
+from .checkpoint import Checkpointer, latest_step, restore, save

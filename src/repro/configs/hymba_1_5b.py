@@ -1,0 +1,31 @@
+"""hymba-1.5b [hybrid] — 32L d_model=1600 25H (GQA kv=5) d_ff=5504
+ssm_state=16 vocab=32001; parallel attention + mamba heads per layer.
+[arXiv:2411.13676]
+
+Adaptations (DESIGN.md): all layers use sliding-window attention (the SSM
+path carries global context — Hymba's stated rationale; the real model keeps
+3 full-attention layers, which would break uniform layer stacking); meta
+tokens are omitted.  Sub-quadratic -> runs the long_500k cell."""
+from .base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="hymba-1.5b",
+    family="hybrid",
+    num_layers=32,
+    d_model=1600,
+    num_heads=25,
+    num_kv_heads=5,
+    d_ff=5504,
+    vocab_size=32_001,
+    ssm_state=16,
+    sliding_window=2048,
+    rope_theta=10_000.0,
+    subquadratic=True,
+))
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="hymba-1.5b-reduced", family="hybrid", num_layers=2, d_model=64,
+        num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=256, ssm_state=4,
+        sliding_window=16, subquadratic=True)

@@ -1,0 +1,26 @@
+"""phi-3-vision-4.2b [vlm] — 32L d_model=3072 32H (MHA kv=32) d_ff=8192
+vocab=32064; phi3-mini backbone + CLIP frontend (STUB: precomputed patch
+embeddings, 512-patch prefix).  [hf:microsoft/Phi-3-vision-128k-instruct]"""
+from .base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="phi-3-vision-4.2b",
+    family="vlm",
+    num_layers=32,
+    d_model=3072,
+    num_heads=32,
+    num_kv_heads=32,
+    d_ff=8192,
+    vocab_size=32_064,
+    rope_theta=10_000.0,
+    frontend="vision_stub",
+    num_patches=512,
+    notes="CLIP tower stubbed; 512-patch prefix keeps packed seq chunkable",
+))
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="phi-3-vision-4.2b-reduced", family="vlm", num_layers=2,
+        d_model=64, num_heads=4, num_kv_heads=4, d_ff=256, vocab_size=256,
+        frontend="vision_stub", num_patches=8)

@@ -1,0 +1,38 @@
+"""whisper-small [audio] — enc-dec, 12L each, d_model=768 12H d_ff=3072
+vocab=51865; conv/mel frontend STUB (precomputed 1500-frame embeddings).
+[arXiv:2212.04356]
+
+The assignment's decode shapes size the *decoder* self-cache (32k), well past
+Whisper's real 448-token decoder window — we lower the backbone at the
+assigned shape (DESIGN.md notes the discrepancy)."""
+from .base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="whisper-small",
+    family="audio",
+    num_layers=12,
+    encoder_layers=12,
+    encoder_seq=1500,
+    d_model=768,
+    num_heads=12,
+    num_kv_heads=12,
+    d_ff=3072,
+    vocab_size=51_865,
+    norm="layernorm",
+    act="gelu",
+    frontend="audio_stub",
+    tie_embeddings=True,
+    # kv_aligned replication is a LOSS here: 12 heads on a 16-way axis would
+    # replicate a cheap (d=768, S<=4k) attention whose score all-reduce was
+    # only ~0.8 s — measured regression 3.5x, so whisper keeps naive TP
+    # (EXPERIMENTS.md §Perf, refuted-hypothesis record).
+    tp_rule="naive",
+))
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-small-reduced", family="audio", num_layers=2,
+        encoder_layers=2, encoder_seq=30, d_model=64, num_heads=4,
+        num_kv_heads=4, d_ff=128, vocab_size=256, norm="layernorm",
+        act="gelu", frontend="audio_stub", tie_embeddings=True)

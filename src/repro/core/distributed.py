@@ -1,0 +1,186 @@
+"""Distributed two-level LOOPS SpMM (paper §3.4 + §3.5, scaled out).
+
+Coarse level (paper: disjoint OpenMP thread groups) -> **disjoint device
+groups** along one mesh axis inside a ``shard_map``: the first ``g`` devices
+execute the CSR(vector) kernel on the irregular-row region, the remaining
+``D - g`` devices execute the BCSR(matrix) kernel on the regular-row region.
+Fine level (paper: row / row-block thread parallelism) -> each device's local
+kernel grid over its row shard.
+
+Row-exclusive outputs make the whole thing synchronisation-free exactly as in
+the paper: every global output row belongs to exactly one device, so the
+combined result is a pure concatenation — no atomics, no all-reduce on C.
+
+Workload balance *within* each group uses nnz-balanced (not row-balanced)
+chunking, which is the distributed analogue of the paper's fine-grained
+row-wise OpenMP partitioning.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..kernels import ref
+from .formats import LoopsFormat
+
+__all__ = ["ShardedLoops", "shard_loops", "distributed_spmm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedLoops:
+    """Device-stacked LOOPS workload: leading axis = device along the spmm
+    mesh axis.  VPU-group devices carry real CSR chunks and a trivial
+    (single zero tile) BCSR chunk; MXU-group devices vice versa."""
+
+    row_ids: np.ndarray    # (D, nnz_pad) int32 — local row ids
+    col_idx: np.ndarray    # (D, nnz_pad) int32
+    vals: np.ndarray       # (D, nnz_pad)
+    tile_rows: np.ndarray  # (D, t_pad) int32 — local block-row ids
+    tile_cols: np.ndarray  # (D, t_pad) int32
+    tile_vals: np.ndarray  # (D, t_pad, Br)
+    row_offset: Tuple[int, ...]  # global first row per device
+    row_count: Tuple[int, ...]   # logical rows per device
+    rows_pad: int                # uniform local output height
+    g_vpu: int                   # devices in the CSR(vector) group
+    br: int
+    shape: Tuple[int, int]
+
+
+def _balanced_chunks(weights: np.ndarray, parts: int) -> list[tuple[int, int]]:
+    """Contiguous [start, stop) unit ranges with ~equal total weight."""
+    total = float(weights.sum())
+    cum = np.concatenate([[0.0], np.cumsum(weights)])
+    bounds = [0]
+    for p in range(1, parts):
+        target = total * p / parts
+        bounds.append(int(np.searchsorted(cum, target)))
+    bounds.append(len(weights))
+    bounds = np.maximum.accumulate(bounds)
+    return [(bounds[i], bounds[i + 1]) for i in range(parts)]
+
+
+def shard_loops(fmt: LoopsFormat, num_devices: int, g_vpu: int) -> ShardedLoops:
+    """Split a LoopsFormat across ``num_devices`` with ``g_vpu`` vector-group
+    devices (paper: t_neon) and the rest matrix-group (t_sme)."""
+    if not 0 <= g_vpu <= num_devices:
+        raise ValueError("g_vpu out of range")
+    csr, bcsr = fmt.csr_part, fmt.bcsr_part
+    g_mxu = num_devices - g_vpu
+    dtype = csr.vals.dtype
+
+    # --- CSR group: nnz-balanced contiguous row ranges of the CSR-part.
+    row_chunks = []
+    if g_vpu:
+        counts = np.diff(csr.row_ptr)
+        for (r0, r1) in _balanced_chunks(counts.astype(np.float64),
+                                         g_vpu):
+            row_chunks.append((r0, r1))
+    # --- BCSR group: tile-balanced contiguous block-row ranges.
+    blk_chunks = []
+    if g_mxu:
+        bcounts = np.diff(bcsr.block_ptr)
+        for (b0, b1) in _balanced_chunks(bcounts.astype(np.float64), g_mxu):
+            blk_chunks.append((b0, b1))
+
+    nnz_pad = 1
+    for (r0, r1) in row_chunks:
+        nnz_pad = max(nnz_pad, int(csr.row_ptr[r1] - csr.row_ptr[r0]), r1 - r0)
+    t_pad = 1
+    for (b0, b1) in blk_chunks:
+        t_pad = max(t_pad, int(bcsr.block_ptr[b1] - bcsr.block_ptr[b0]))
+
+    rows_pad = 1
+    for (r0, r1) in row_chunks:
+        rows_pad = max(rows_pad, r1 - r0)
+    for (b0, b1) in blk_chunks:
+        rows_pad = max(rows_pad, (b1 - b0) * bcsr.br)
+
+    D = num_devices
+    row_ids = np.zeros((D, nnz_pad), np.int32)
+    col_idx = np.zeros((D, nnz_pad), np.int32)
+    vals = np.zeros((D, nnz_pad), dtype)
+    tile_rows = np.zeros((D, t_pad), np.int32)
+    tile_cols = np.zeros((D, t_pad), np.int32)
+    tile_vals = np.zeros((D, t_pad, bcsr.br), dtype)
+    row_offset, row_count = [], []
+
+    for d, (r0, r1) in enumerate(row_chunks):
+        s, e = int(csr.row_ptr[r0]), int(csr.row_ptr[r1])
+        row_ids[d, :e - s] = csr.row_ids[s:e] - r0
+        # Padding entries keep writing row 0 with val 0 — harmless.
+        col_idx[d, :e - s] = csr.col_idx[s:e]
+        vals[d, :e - s] = csr.vals[s:e]
+        row_offset.append(r0)
+        row_count.append(r1 - r0)
+    for i, (b0, b1) in enumerate(blk_chunks):
+        d = g_vpu + i
+        s, e = int(bcsr.block_ptr[b0]), int(bcsr.block_ptr[b1])
+        tile_rows[d, :e - s] = bcsr.tile_rows[s:e] - b0
+        tile_cols[d, :e - s] = bcsr.tile_cols[s:e]
+        tile_vals[d, :e - s] = bcsr.tile_vals[s:e]
+        row_offset.append(fmt.r_boundary + b0 * bcsr.br)
+        row_count.append(min((b1 - b0) * bcsr.br,
+                             bcsr.nrows - b0 * bcsr.br))
+
+    return ShardedLoops(
+        row_ids=row_ids, col_idx=col_idx, vals=vals, tile_rows=tile_rows,
+        tile_cols=tile_cols, tile_vals=tile_vals,
+        row_offset=tuple(row_offset), row_count=tuple(row_count),
+        rows_pad=rows_pad, g_vpu=g_vpu, br=bcsr.br, shape=fmt.shape)
+
+
+def distributed_spmm(sharded: ShardedLoops, b: jax.Array, mesh: Mesh,
+                     axis="model", assemble: bool = True) -> jax.Array:
+    """Run the two-level schedule on ``mesh[axis]``; returns the global C.
+
+    ``axis`` may be a single mesh axis or a tuple (e.g. ("data", "model") to
+    flatten the whole production pod into one SpMM worker axis).
+
+    Every device computes its local kernel over its shard (the off-group
+    kernel sees a single zero entry and contributes nothing), then the
+    per-device row slices are concatenated with statically known offsets —
+    zero inter-device communication beyond B's broadcast, the scaled-out
+    version of the paper's conflict-free row ownership.
+    """
+    axes = (axis,) if isinstance(axis, str) else tuple(axis)
+    D = 1
+    for a in axes:
+        D *= mesh.shape[a]
+    axis = axes if len(axes) > 1 else axes[0]
+    rows_pad, br = sharded.rows_pad, sharded.br
+    nblocks_pad = (rows_pad + br - 1) // br
+
+    @partial(
+        jax.shard_map, mesh=mesh,
+        in_specs=(P(axis), P(axis), P(axis), P(axis), P(axis), P(axis),
+                  P()),
+        out_specs=P(axis))
+    def run(row_ids, col_idx, vals, tile_rows, tile_cols, tile_vals, bloc):
+        row_ids, col_idx, vals = row_ids[0], col_idx[0], vals[0]
+        tile_rows, tile_cols, tile_vals = (tile_rows[0], tile_cols[0],
+                                           tile_vals[0])
+        out_c = ref.csr_spmm_ref(row_ids, col_idx, vals, bloc, rows_pad)
+        out_b = ref.bcsr_spmm_ref(tile_rows, tile_cols, tile_vals, bloc,
+                                  nblocks_pad)[:rows_pad]
+        return (out_c + out_b)[None]
+
+    stacked = run(jnp.asarray(sharded.row_ids), jnp.asarray(sharded.col_idx),
+                  jnp.asarray(sharded.vals), jnp.asarray(sharded.tile_rows),
+                  jnp.asarray(sharded.tile_cols),
+                  jnp.asarray(sharded.tile_vals), b)
+
+    if not assemble:
+        # §Perf iteration: leave C row-sharded (D, rows_pad, N).  Row
+        # ownership is exclusive (paper §3.4), so downstream row-parallel
+        # consumers (GNN layers, further SpMMs) read their shard locally —
+        # assembling to a replicated dense C is pure collective overhead.
+        return stacked
+    pieces = [stacked[d, :sharded.row_count[d]] for d in range(D)
+              if sharded.row_count[d] > 0]
+    return jnp.concatenate(pieces, axis=0)

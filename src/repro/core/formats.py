@@ -1,0 +1,305 @@
+"""Sparse formats for LOOPS (paper §3.2).
+
+The LOOPS hybrid format row-splits a CSR matrix at ``r_boundary`` into
+
+  * a **CSR-part** (rows ``[0, r_boundary)``) kept in row-wise CSR and executed by
+    the *vector* pipeline (paper: NEON AXPY kernel; here: TPU VPU Pallas kernel),
+  * a **vector-wise BCSR-part** (rows ``[r_boundary, nrows)``) re-tiled into
+    asymmetric ``Br x 1`` column tiles executed by the *matrix* pipeline
+    (paper: SME ``fmopa`` outer products into ZA tiles; here: TPU MXU rank-1
+    accumulation chains — the systolic array natively sums rank-1 updates).
+
+Construction follows the paper's Algorithm 1.  All format construction is
+host-side numpy (the paper likewise excludes conversion from kernel timing and
+amortizes it in end-to-end runs, §4.5); the resulting arrays are jit-traceable
+constants or device arrays.
+
+TPU-specific invariants (documented deviations from the Arm layout):
+  * every CSR row and every BCSR block-row carries at least one (possibly
+    zero-valued) entry so that the scatter-style Pallas output ``index_map``
+    visits — and therefore initialises — every output block;
+  * entries are sorted by (row, col) / (block_row, col): the kernels rely on the
+    *monotone* output index to legally revisit accumulator blocks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import numpy as np
+
+__all__ = [
+    "CSR",
+    "VectorBCSR",
+    "LoopsFormat",
+    "csr_from_dense",
+    "csr_to_dense",
+    "csr_slice_rows",
+    "bcsr_from_csr_rows",
+    "loops_from_csr",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class CSR:
+    """Standard CSR with an auxiliary per-nonzero row-id array.
+
+    ``row_ids`` is redundant with ``row_ptr`` but makes both the pure-jnp
+    reference (segment-sum) and the Pallas scatter kernel static-shape friendly.
+    """
+
+    row_ptr: np.ndarray  # (nrows + 1,) int32
+    col_idx: np.ndarray  # (nnz,) int32
+    vals: np.ndarray     # (nnz,) float
+    row_ids: np.ndarray  # (nnz,) int32, nondecreasing
+    shape: Tuple[int, int]
+
+    @property
+    def nrows(self) -> int:
+        return self.shape[0]
+
+    @property
+    def ncols(self) -> int:
+        return self.shape[1]
+
+    @property
+    def nnz(self) -> int:
+        return int(self.vals.shape[0])
+
+    def astype(self, dtype) -> "CSR":
+        return dataclasses.replace(self, vals=self.vals.astype(dtype))
+
+
+@dataclasses.dataclass(frozen=True)
+class VectorBCSR:
+    """Vector-wise BCSR: ``Br x 1`` column tiles grouped by block-row.
+
+    A tile ``t`` holds the ``Br`` values of column ``tile_cols[t]`` for the rows
+    ``[row_offset + tile_rows[t]*Br, ... + Br)``.  ``tile_rows`` is sorted
+    nondecreasing; within a block-row tiles are sorted by column.  This is the
+    paper's LOOPS BCSR-part with ``(B_r, B_c) = (vector_size, 1)`` — the
+    asymmetric shape that kills the zero-propagation padding of square tiles
+    (paper C1) — stored as CSR-of-tiles rather than ELL so that skewed
+    block-rows cost no padding.
+    """
+
+    tile_rows: np.ndarray  # (ntiles,) int32 block-row index, nondecreasing
+    tile_cols: np.ndarray  # (ntiles,) int32 column index
+    tile_vals: np.ndarray  # (ntiles, Br) float
+    block_ptr: np.ndarray  # (nblocks + 1,) int32 tile extents per block-row
+    br: int                # tile height (paper: cntd / cntf / cnth)
+    nrows: int             # logical row count covered (<= nblocks * br)
+    shape: Tuple[int, int]  # (nrows, ncols)
+
+    @property
+    def nblocks(self) -> int:
+        return int(self.block_ptr.shape[0] - 1)
+
+    @property
+    def ntiles(self) -> int:
+        return int(self.tile_cols.shape[0])
+
+    @property
+    def ncols(self) -> int:
+        return self.shape[1]
+
+    def astype(self, dtype) -> "VectorBCSR":
+        return dataclasses.replace(self, tile_vals=self.tile_vals.astype(dtype))
+
+
+@dataclasses.dataclass(frozen=True)
+class LoopsFormat:
+    """The hybrid LOOPS format (paper §3.2.1, Algorithm 1)."""
+
+    csr_part: CSR          # rows [0, r_boundary)
+    bcsr_part: VectorBCSR  # rows [r_boundary, nrows)
+    r_boundary: int
+    shape: Tuple[int, int]
+
+    @property
+    def nrows(self) -> int:
+        return self.shape[0]
+
+    @property
+    def ncols(self) -> int:
+        return self.shape[1]
+
+    @property
+    def nnz(self) -> int:
+        # Logical nonzeros (excluding structural zero padding).
+        return int(np.count_nonzero(self.csr_part.vals)
+                   + np.count_nonzero(self.bcsr_part.tile_vals))
+
+    def astype(self, dtype) -> "LoopsFormat":
+        return dataclasses.replace(
+            self, csr_part=self.csr_part.astype(dtype),
+            bcsr_part=self.bcsr_part.astype(dtype))
+
+
+# ---------------------------------------------------------------------------
+# CSR construction
+# ---------------------------------------------------------------------------
+
+def _ensure_nonempty_rows(row_ptr, col_idx, vals):
+    """Insert a single explicit zero entry (col 0) into every empty row.
+
+    Guarantees the scatter-output Pallas kernels visit every output row, so no
+    block is left uninitialised on hardware where out-of-grid blocks are
+    undefined (interpret mode zero-fills; real TPUs do not).
+    """
+    counts = np.diff(row_ptr)
+    if (counts > 0).all() and len(counts) > 0:
+        return row_ptr, col_idx, vals
+    nrows = len(counts)
+    new_counts = np.maximum(counts, 1)
+    new_ptr = np.zeros(nrows + 1, np.int32)
+    np.cumsum(new_counts, out=new_ptr[1:])
+    new_cols = np.zeros(new_ptr[-1], np.int32)
+    new_vals = np.zeros(new_ptr[-1], vals.dtype)
+    for i in range(nrows):
+        s, e = row_ptr[i], row_ptr[i + 1]
+        ns = new_ptr[i]
+        if e > s:
+            new_cols[ns:ns + (e - s)] = col_idx[s:e]
+            new_vals[ns:ns + (e - s)] = vals[s:e]
+        # else: the zero pad entry at (i, 0) is already in place.
+    return new_ptr, new_cols, new_vals
+
+
+def _csr_from_arrays(row_ptr, col_idx, vals, shape) -> CSR:
+    row_ptr = np.asarray(row_ptr, np.int32)
+    col_idx = np.asarray(col_idx, np.int32)
+    vals = np.asarray(vals)
+    row_ptr, col_idx, vals = _ensure_nonempty_rows(row_ptr, col_idx, vals)
+    row_ids = np.repeat(
+        np.arange(shape[0], dtype=np.int32), np.diff(row_ptr)).astype(np.int32)
+    return CSR(row_ptr=row_ptr, col_idx=col_idx, vals=vals, row_ids=row_ids,
+               shape=tuple(shape))
+
+
+def csr_from_dense(dense: np.ndarray) -> CSR:
+    dense = np.asarray(dense)
+    nrows, _ = dense.shape
+    mask = dense != 0
+    counts = mask.sum(axis=1)
+    row_ptr = np.zeros(nrows + 1, np.int32)
+    np.cumsum(counts, out=row_ptr[1:])
+    rows, cols = np.nonzero(mask)
+    return _csr_from_arrays(row_ptr, cols, dense[rows, cols], dense.shape)
+
+
+def csr_from_coo(rows, cols, vals, shape) -> CSR:
+    rows = np.asarray(rows, np.int64)
+    cols = np.asarray(cols, np.int64)
+    vals = np.asarray(vals)
+    order = np.lexsort((cols, rows))
+    rows, cols, vals = rows[order], cols[order], vals[order]
+    counts = np.bincount(rows, minlength=shape[0])
+    row_ptr = np.zeros(shape[0] + 1, np.int32)
+    np.cumsum(counts, out=row_ptr[1:])
+    return _csr_from_arrays(row_ptr, cols, vals, shape)
+
+
+def csr_to_dense(csr: CSR) -> np.ndarray:
+    out = np.zeros(csr.shape, csr.vals.dtype)
+    # += (not =) so structural-zero pads coexisting with real entries are safe.
+    np.add.at(out, (csr.row_ids, csr.col_idx), csr.vals)
+    return out
+
+
+def csr_slice_rows(csr: CSR, start: int, stop: int) -> CSR:
+    """Rows [start, stop) as a new CSR (paper Alg. 1 Step 1)."""
+    s, e = int(csr.row_ptr[start]), int(csr.row_ptr[stop])
+    row_ptr = (csr.row_ptr[start:stop + 1] - csr.row_ptr[start]).astype(np.int32)
+    return _csr_from_arrays(row_ptr, csr.col_idx[s:e], csr.vals[s:e],
+                            (stop - start, csr.shape[1]))
+
+
+# ---------------------------------------------------------------------------
+# Vector-wise BCSR construction (paper Alg. 1 Step 2, with B_c = 1)
+# ---------------------------------------------------------------------------
+
+def bcsr_from_csr_rows(csr: CSR, start: int, stop: int, br: int) -> VectorBCSR:
+    """Re-tile rows [start, stop) of ``csr`` into ``br x 1`` tiles.
+
+    Mirrors Algorithm 1's tile-map construction: each nonzero (i, j) lands in
+    tile ``(i // br, j)`` at intra-tile offset ``i % br``.  Tiles are emitted
+    sorted by (block_row, col); every block-row gets >= 1 tile.
+    """
+    nrows = stop - start
+    nblocks = max((nrows + br - 1) // br, 1)
+    tile_map = {}
+    for i in range(start, stop):
+        local = i - start
+        tr = local // br
+        off = local % br
+        for k in range(int(csr.row_ptr[i]), int(csr.row_ptr[i + 1])):
+            j = int(csr.col_idx[k])
+            v = csr.vals[k]
+            if v == 0:
+                continue  # drop structural pads from the parent CSR
+            key = (tr, j)
+            tile = tile_map.get(key)
+            if tile is None:
+                tile = np.zeros(br, csr.vals.dtype)
+                tile_map[key] = tile
+            tile[off] += v
+
+    # Ensure every block-row is visited at least once.
+    present = {tr for tr, _ in tile_map}
+    for tr in range(nblocks):
+        if tr not in present:
+            tile_map[(tr, 0)] = np.zeros(br, csr.vals.dtype)
+
+    keys = sorted(tile_map.keys())
+    ntiles = len(keys)
+    tile_rows = np.fromiter((k[0] for k in keys), np.int32, ntiles)
+    tile_cols = np.fromiter((k[1] for k in keys), np.int32, ntiles)
+    tile_vals = np.stack([tile_map[k] for k in keys]) if ntiles else \
+        np.zeros((0, br), csr.vals.dtype)
+    counts = np.bincount(tile_rows, minlength=nblocks)
+    block_ptr = np.zeros(nblocks + 1, np.int32)
+    np.cumsum(counts, out=block_ptr[1:])
+    return VectorBCSR(tile_rows=tile_rows, tile_cols=tile_cols,
+                      tile_vals=tile_vals, block_ptr=block_ptr, br=br,
+                      nrows=nrows, shape=(nrows, csr.shape[1]))
+
+
+# ---------------------------------------------------------------------------
+# Hybrid LOOPS format (Algorithm 1)
+# ---------------------------------------------------------------------------
+
+def loops_from_csr(csr: CSR, r_boundary: int, br: int) -> LoopsFormat:
+    """Algorithm 1: CSR-part = rows [0, r_boundary), BCSR-part = the rest."""
+    if not 0 <= r_boundary <= csr.nrows:
+        raise ValueError(f"r_boundary {r_boundary} out of range [0, {csr.nrows}]")
+    csr_part = csr_slice_rows(csr, 0, r_boundary)
+    bcsr_part = bcsr_from_csr_rows(csr, r_boundary, csr.nrows, br)
+    return LoopsFormat(csr_part=csr_part, bcsr_part=bcsr_part,
+                       r_boundary=r_boundary, shape=csr.shape)
+
+
+def permute_rows(csr: CSR, order: np.ndarray) -> CSR:
+    """New CSR whose row i is ``csr`` row ``order[i]`` (O(nnz))."""
+    counts = np.diff(csr.row_ptr)[order]
+    new_ptr = np.zeros(csr.nrows + 1, np.int32)
+    np.cumsum(counts, out=new_ptr[1:])
+    idx = np.concatenate([
+        np.arange(csr.row_ptr[r], csr.row_ptr[r + 1]) for r in order
+    ]) if csr.nnz else np.zeros(0, np.int64)
+    return _csr_from_arrays(new_ptr, csr.col_idx[idx], csr.vals[idx],
+                            csr.shape)
+
+
+def loops_from_csr_sorted(csr: CSR, r_boundary: int, br: int
+                          ) -> Tuple[LoopsFormat, np.ndarray]:
+    """Beyond-paper variant (§Perf): sort rows by nnz descending before the
+    positional split, so scattered hub rows all land in the CSR(vector) part
+    and the BCSR region has no monster block-rows (which are indivisible
+    under contiguous device chunking and explode the padding).
+
+    Returns (format, order) with ``C_permuted[i] == C[order[i]]``; consumers
+    either apply the inverse permutation to the output or keep operating in
+    permuted row space (GNN layers don't care about row order)."""
+    order = np.argsort(-np.diff(csr.row_ptr), kind="stable").astype(np.int64)
+    return loops_from_csr(permute_rows(csr, order), r_boundary, br), order

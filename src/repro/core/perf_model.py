@@ -1,0 +1,99 @@
+"""Lightweight quadratic performance model + scheduler (paper §3.5).
+
+The paper models throughput as a quadratic in the two thread-group sizes with
+no cross term (Eq. 2) because the NEON and SME pipelines are independent:
+
+    perf(x, y) = a0 + a1*x + a2*y + a3*x^2 + a4*y^2
+
+and schedules by enumerating all (x, y) with x + y <= T (Eq. 3).
+
+TPU adaptation: "threads" become *device-group sizes* of the VPU-kernel group
+and the MXU-kernel group inside a shard_map (coarse level), or — within a
+single chip — the fraction of Pallas grid steps routed through each pipeline.
+The functional form and the argmax scheduler are kept verbatim; only the
+calibration source changes (wall-clock interpret runs at small scale, or
+roofline terms from the compiled dry-run at production scale).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Iterable, Sequence, Tuple
+
+import numpy as np
+
+__all__ = ["QuadraticPerfModel", "fit_perf_model", "best_allocation",
+           "calibrate"]
+
+
+@dataclasses.dataclass(frozen=True)
+class QuadraticPerfModel:
+    """perf(x, y) = a0 + a1 x + a2 y + a3 x**2 + a4 y**2 (paper Eq. 2)."""
+
+    coef: np.ndarray  # (5,) [a0, a1, a2, a3, a4]
+
+    def predict(self, x, y):
+        x = np.asarray(x, np.float64)
+        y = np.asarray(y, np.float64)
+        a = self.coef
+        return a[0] + a[1] * x + a[2] * y + a[3] * x * x + a[4] * y * y
+
+    def best_allocation(self, total: int,
+                        allow_zero: bool = True) -> Tuple[int, int]:
+        """Paper Eq. 3: argmax over x + y <= total (exhaustive — core counts
+        are small, and so are practical device-group splits)."""
+        lo = 0 if allow_zero else 1
+        best, best_perf = (lo, lo), -np.inf
+        for x in range(lo, total + 1):
+            for y in range(lo, total - x + 1):
+                if x + y == 0:
+                    continue
+                p = float(self.predict(x, y))
+                if p > best_perf:
+                    best, best_perf = (x, y), p
+        return best
+
+
+def fit_perf_model(samples: Sequence[Tuple[int, int]],
+                   perfs: Sequence[float]) -> QuadraticPerfModel:
+    """Least-squares fit of Eq. 2 over measured (x, y) -> perf samples."""
+    xy = np.asarray(samples, np.float64)
+    if xy.ndim != 2 or xy.shape[1] != 2 or xy.shape[0] < 5:
+        raise ValueError("need >= 5 (x, y) samples to fit 5 coefficients")
+    x, y = xy[:, 0], xy[:, 1]
+    design = np.stack([np.ones_like(x), x, y, x * x, y * y], axis=1)
+    coef, *_ = np.linalg.lstsq(design, np.asarray(perfs, np.float64),
+                               rcond=None)
+    return QuadraticPerfModel(coef=coef)
+
+
+def default_candidates(total: int) -> Iterable[Tuple[int, int]]:
+    """Representative warm-up configurations (paper §3.1: 'a representative set
+    of parameter configurations'): the axes, the diagonal, and the corners."""
+    cand = set()
+    for t in (1, max(total // 4, 1), max(total // 2, 1), total):
+        cand.add((t, 0))
+        cand.add((0, t))
+        cand.add((t, max(total - t, 0)))
+        cand.add((max(total - t, 0), t))
+    cand.add((max(total // 2, 1), max(total // 2, 1)))
+    return sorted((x, y) for (x, y) in cand if 0 < x + y <= total)
+
+
+def calibrate(measure: Callable[[int, int], float], total: int,
+              candidates: Iterable[Tuple[int, int]] | None = None
+              ) -> QuadraticPerfModel:
+    """Fit the model from warm-up measurements.
+
+    ``measure(x, y)`` returns a performance score (higher is better; e.g.
+    GFLOP/s) for ``x`` vector-group and ``y`` matrix-group workers.
+    """
+    cand = list(candidates if candidates is not None
+                else default_candidates(total))
+    perfs = [measure(x, y) for (x, y) in cand]
+    return fit_perf_model(cand, perfs)
+
+
+def best_allocation(measure: Callable[[int, int], float], total: int
+                    ) -> Tuple[int, int]:
+    """Calibrate + schedule in one call (paper §3.5.3)."""
+    return calibrate(measure, total).best_allocation(total)

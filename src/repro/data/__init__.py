@@ -1,0 +1,2 @@
+"""Deterministic, resumable, shardable synthetic data pipeline."""
+from .pipeline import DataConfig, global_batch_at, host_shard

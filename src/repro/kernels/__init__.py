@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the LOOPS hot paths.
+
+``csr_spmm``  — VPU row-wise AXPY kernel (paper's NEON kernel).
+``bcsr_spmm`` — MXU outer-product-chain kernel (paper's SME fmopa kernel).
+
+Each kernel ships a pure-jnp oracle in ``ref.py``; ``ops.py`` dispatches
+between real-TPU Pallas, interpret-mode Pallas (CPU validation) and the
+reference path.
+"""
+from . import ops, ref
+from .bcsr_spmm import bcsr_spmm_pallas
+from .csr_spmm import csr_spmm_pallas
+
+__all__ = ["ops", "ref", "bcsr_spmm_pallas", "csr_spmm_pallas"]

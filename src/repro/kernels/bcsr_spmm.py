@@ -1,0 +1,114 @@
+"""BCSR-part SpMM Pallas kernel — the MXU (matrix-pipeline) half of LOOPS.
+
+Paper mapping (§3.3 "Outer-product based SME kernel for BCSR part",
+Algorithm 2 + Figure 2): the BCSR-part stores ``Br x 1`` column tiles; each
+tile contributes a rank-1 update
+
+    C[block p] += tile_vals[t] (x) B[tile_cols[t], :]
+
+accumulated in a ZA tile register.  On TPU the accumulator is a VMEM block and
+the rank-1 updates stream through the MXU: a chain of ``(Br,1) @ (1,bn)`` dots
+accumulated into the same resident block is exactly how the systolic array
+consumes a matmul — the MXU *is* a hardware "sum of outer products" engine, so
+the paper's fmopa loop maps 1:1 onto consecutive grid steps that revisit one
+output block.
+
+Precision (§3.3 FP16 path, Algorithm 3): the paper uses the 2-way widening
+``fmopa`` (two f16 outer products into one f32 ZA tile) with vzip register
+shuffles.  The TPU MXU natively multiplies bf16 operands and accumulates in
+fp32 (``preferred_element_type=float32``), which realises the same
+half-in/single-accumulate contract without any shuffle — the packing is done
+by the hardware.  FP64 uses ``preferred_element_type=float64`` (lowered by
+XLA to VPU sequences on real TPUs, which have no f64 MXU mode).
+
+The paper's Figure-2 "multi-tile" optimisation (multiple 1 x cntd tiles of B
+per fmopa round, several ZA tiles in flight) is realised by the ``bn`` block
+width: one (1, bn) B block with bn = 128 * za covers ``za`` lane tiles per
+visit.
+
+grid = (N // bn, ntiles); ``tile_rows`` is nondecreasing so output-block
+revisiting is legal, exactly as in the CSR kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .ref import acc_dtype_for
+
+__all__ = ["bcsr_spmm_pallas"]
+
+
+def _kernel(tile_rows_ref, tile_cols_ref, vals_ref, b_ref, o_ref, acc_ref):
+    k = pl.program_id(1)
+    ntiles = pl.num_programs(1)
+
+    row_here = tile_rows_ref[k]
+    row_prev = tile_rows_ref[jnp.maximum(k - 1, 0)]
+    row_next = tile_rows_ref[jnp.minimum(k + 1, ntiles - 1)]
+    first = jnp.logical_or(k == 0, row_here != row_prev)
+    last = jnp.logical_or(k == ntiles - 1, row_here != row_next)
+
+    @pl.when(first)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a_tile = vals_ref[0]         # (Br, 1) column tile of A
+    b_row = b_ref[...]           # (1, bn) gathered row of B
+    # Rank-1 outer product, accumulated — the fmopa analogue.  For bf16 the
+    # MXU widens to fp32 in hardware (2-way fmopa equivalent).
+    acc_ref[...] += jax.lax.dot_general(
+        a_tile, b_row, (((1,), (0,)), ((), ())),
+        preferred_element_type=acc_ref.dtype)
+
+    @pl.when(last)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("nblocks", "bn", "out_dtype", "interpret"))
+def bcsr_spmm_pallas(tile_rows: jax.Array, tile_cols: jax.Array,
+                     tile_vals: jax.Array, b: jax.Array, *, nblocks: int,
+                     bn: int | None = None, out_dtype=None,
+                     interpret: bool = True) -> jax.Array:
+    """Vector-wise BCSR SpMM; returns the padded (nblocks * Br, N) result.
+
+    Args:
+      tile_rows: (T,) int32 block-row per tile, nondecreasing.
+      tile_cols: (T,) int32 gather row of ``b`` per tile.
+      tile_vals: (T, Br) tile values (Br = the paper's cntd/cntf/cnth).
+      b:         (K, N) dense operand.
+      nblocks:   number of block-rows (static).
+      bn:        B/accumulator column width per visit (multi-ZA-tile factor);
+                 defaults to min(N, 512) = 4 lane tiles.
+    """
+    ntiles, br = tile_vals.shape
+    n = b.shape[1]
+    bn = bn or min(n, 512)
+    if n % bn:
+        raise ValueError(f"N={n} not divisible by bn={bn}")
+    acc_dtype = acc_dtype_for(tile_vals.dtype)
+    out_dtype = out_dtype or acc_dtype
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # tile_rows, tile_cols
+        grid=(n // bn, ntiles),
+        in_specs=[
+            pl.BlockSpec((1, br, 1), lambda j, k, rows, cols: (k, 0, 0)),
+            pl.BlockSpec((1, bn), lambda j, k, rows, cols: (cols[k], j)),
+        ],
+        out_specs=pl.BlockSpec((br, bn), lambda j, k, rows, cols: (rows[k], j)),
+        scratch_shapes=[pltpu.VMEM((br, bn), acc_dtype)],
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((nblocks * br, n), out_dtype),
+        interpret=interpret,
+    )(tile_rows, tile_cols, tile_vals.reshape(ntiles, br, 1), b)

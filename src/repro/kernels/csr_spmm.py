@@ -1,0 +1,105 @@
+"""CSR-part SpMM Pallas kernel — the VPU (vector-pipeline) half of LOOPS.
+
+Paper mapping (§3.3 "AXPY based NEON kernel for CSR part"): for each nonzero
+``(r, c, v)`` of the CSR-part, AXPY-accumulate ``v * B[c, :]`` into output row
+``r``.  On Arm this vectorises over NEON lanes; on TPU it vectorises over the
+VPU's 8x128 lanes along the N (dense-column) dimension.  No MXU involvement —
+this kernel exists precisely so that irregular rows do not pay the
+outer-product padding cost (paper C1) and so that the matrix pipeline is left
+free for the BCSR-part (paper C3).
+
+Implementation notes
+--------------------
+* grid = (N // bn, nnz): the inner grid dimension walks nonzeros in (row, col)
+  order; the *output* BlockSpec index_map scatters to ``row_ids[k]`` which is
+  nondecreasing, so Pallas legally keeps the current output block resident in
+  VMEM across consecutive grid steps of the same row (the TPU analogue of
+  keeping the NEON accumulator registers live across a row).
+* ``row_ids``/``col_idx`` arrive via scalar prefetch (SMEM) so the B-row
+  gather is expressed in the BlockSpec index_map — the standard Pallas-TPU
+  sparse-gather idiom; the DMA for step k+1 overlaps with compute of step k.
+* Accumulation runs in fp32 scratch for {bf16, f16} inputs (f16f16f32
+  contract) and in the native dtype for f32/f64.
+* every output row must appear in ``row_ids`` at least once (format layer
+  guarantees this via explicit zero entries) or its block would be left
+  uninitialised on real hardware.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .ref import acc_dtype_for
+
+__all__ = ["csr_spmm_pallas"]
+
+
+def _kernel(row_ids_ref, col_idx_ref, vals_ref, b_ref, o_ref, acc_ref):
+    k = pl.program_id(1)
+    nnz = pl.num_programs(1)
+
+    row_here = row_ids_ref[k]
+    row_prev = row_ids_ref[jnp.maximum(k - 1, 0)]
+    row_next = row_ids_ref[jnp.minimum(k + 1, nnz - 1)]
+    first = jnp.logical_or(k == 0, row_here != row_prev)
+    last = jnp.logical_or(k == nnz - 1, row_here != row_next)
+
+    @pl.when(first)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    v = vals_ref[0, 0].astype(acc_ref.dtype)       # scalar nonzero value
+    acc_ref[...] += v * b_ref[...].astype(acc_ref.dtype)  # AXPY over N lanes
+
+    @pl.when(last)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("nrows", "bn", "out_dtype", "interpret"))
+def csr_spmm_pallas(row_ids: jax.Array, col_idx: jax.Array, vals: jax.Array,
+                    b: jax.Array, *, nrows: int, bn: int | None = None,
+                    out_dtype=None, interpret: bool = True) -> jax.Array:
+    """C[r] += vals[k] * B[col_idx[k], :] for every nonzero k (rows sorted).
+
+    Args:
+      row_ids: (nnz,) int32, nondecreasing output row per nonzero.
+      col_idx: (nnz,) int32 gather row of ``b`` per nonzero.
+      vals:    (nnz,) values.
+      b:       (K, N) dense operand.
+      nrows:   output row count (static).
+      bn:      dense-column block width; defaults to min(N, 512) — the wide
+               block is the analogue of the paper's multi-tile trick (several
+               128-lane column tiles processed per visit).
+      interpret: run the Pallas interpreter (CPU validation); False on TPU.
+    """
+    nnz = row_ids.shape[0]
+    n = b.shape[1]
+    bn = bn or min(n, 512)
+    if n % bn:
+        raise ValueError(f"N={n} not divisible by bn={bn}")
+    acc_dtype = acc_dtype_for(vals.dtype)
+    out_dtype = out_dtype or acc_dtype
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # row_ids, col_idx
+        grid=(n // bn, nnz),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda j, k, rows, cols: (k, 0)),       # vals
+            pl.BlockSpec((1, bn), lambda j, k, rows, cols: (cols[k], j)),  # B row
+        ],
+        out_specs=pl.BlockSpec((1, bn), lambda j, k, rows, cols: (rows[k], j)),
+        scratch_shapes=[pltpu.VMEM((1, bn), acc_dtype)],
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((nrows, n), out_dtype),
+        interpret=interpret,
+    )(row_ids, col_idx, vals.reshape(nnz, 1), b)

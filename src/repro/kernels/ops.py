@@ -1,0 +1,60 @@
+"""jit'd dispatch wrappers over the LOOPS Pallas kernels.
+
+``ops`` is the layer the rest of the framework calls: it accepts the host-side
+format dataclasses (``repro.core.formats``), moves arrays to device, picks the
+execution backend (Pallas-on-TPU, Pallas-interpret on CPU for validation, or
+the pure-jnp reference), and handles precision promotion.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .bcsr_spmm import bcsr_spmm_pallas
+from .csr_spmm import csr_spmm_pallas
+
+__all__ = ["csr_spmm", "bcsr_spmm", "default_backend"]
+
+
+def default_backend() -> str:
+    """'pallas' on real TPUs, 'interpret' elsewhere (CPU validation), matching
+    the assignment contract: TPU is the target, interpret mode the oracle
+    runner."""
+    return "pallas" if jax.default_backend() == "tpu" else "interpret"
+
+
+def csr_spmm(csr, b: jax.Array, *, backend: str | None = None,
+             bn: int | None = None, out_dtype=None) -> jax.Array:
+    """SpMM of a ``repro.core.formats.CSR`` against dense ``b`` (K, N)."""
+    backend = backend or default_backend()
+    row_ids = jnp.asarray(csr.row_ids)
+    col_idx = jnp.asarray(csr.col_idx)
+    vals = jnp.asarray(csr.vals)
+    if backend == "jnp":
+        return ref.csr_spmm_ref(row_ids, col_idx, vals, b, csr.nrows,
+                                out_dtype=out_dtype)
+    return csr_spmm_pallas(row_ids, col_idx, vals, b, nrows=csr.nrows,
+                           bn=bn, out_dtype=out_dtype,
+                           interpret=(backend == "interpret"))
+
+
+def bcsr_spmm(bcsr, b: jax.Array, *, backend: str | None = None,
+              bn: int | None = None, out_dtype=None) -> jax.Array:
+    """SpMM of a ``repro.core.formats.VectorBCSR`` against dense ``b``.
+
+    Returns the *logical* (bcsr.nrows, N) result (padding rows trimmed).
+    """
+    backend = backend or default_backend()
+    tile_rows = jnp.asarray(bcsr.tile_rows)
+    tile_cols = jnp.asarray(bcsr.tile_cols)
+    tile_vals = jnp.asarray(bcsr.tile_vals)
+    if backend == "jnp":
+        padded = ref.bcsr_spmm_ref(tile_rows, tile_cols, tile_vals, b,
+                                   bcsr.nblocks, out_dtype=out_dtype)
+    else:
+        padded = bcsr_spmm_pallas(tile_rows, tile_cols, tile_vals, b,
+                                  nblocks=bcsr.nblocks, bn=bn,
+                                  out_dtype=out_dtype,
+                                  interpret=(backend == "interpret"))
+    return padded[:bcsr.nrows]

@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for the LOOPS Pallas kernels.
+
+These are the ground truth for every kernel test (swept over shapes, dtypes
+and sparsity patterns) and the fallback execution path on backends without
+Pallas support.  They also stand in for the paper's CPU baselines:
+``csr_spmm_ref`` is the TACO-style row-wise CSR schedule and ``dense_spmm``
+is the Armadillo-style dense product.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["csr_spmm_ref", "bcsr_spmm_ref", "dense_spmm", "acc_dtype_for"]
+
+
+def acc_dtype_for(dtype) -> jnp.dtype:
+    """fp32 accumulation for half precision (the paper's f16f16f32 contract,
+    realised on TPU as the native bf16xbf16->f32 MXU mode); otherwise the
+    input precision.  Canonicalised so f64 degrades to f32 when x64 is off."""
+    dtype = jax.dtypes.canonicalize_dtype(jnp.dtype(dtype))
+    if dtype in (jnp.bfloat16, jnp.float16):
+        return jnp.dtype(jnp.float32)
+    return dtype
+
+
+def csr_spmm_ref(row_ids: jax.Array, col_idx: jax.Array, vals: jax.Array,
+                 b: jax.Array, nrows: int, out_dtype=None) -> jax.Array:
+    """Row-wise CSR SpMM: C[r] = sum_{k in row r} vals[k] * B[col[k], :]."""
+    acc = acc_dtype_for(vals.dtype)
+    out_dtype = out_dtype or acc
+    contrib = vals.astype(acc)[:, None] * b[col_idx].astype(acc)
+    out = jax.ops.segment_sum(contrib, row_ids, num_segments=nrows)
+    return out.astype(out_dtype)
+
+
+def bcsr_spmm_ref(tile_rows: jax.Array, tile_cols: jax.Array,
+                  tile_vals: jax.Array, b: jax.Array, nblocks: int,
+                  out_dtype=None) -> jax.Array:
+    """Vector-wise BCSR SpMM as a sum of rank-1 (outer-product) updates:
+
+        C[block p] = sum_{tile t in p} tile_vals[t] (x) B[tile_cols[t], :]
+
+    Returns the padded (nblocks * Br, N) result; callers trim to the logical
+    row count.
+    """
+    acc = acc_dtype_for(tile_vals.dtype)
+    out_dtype = out_dtype or acc
+    br = tile_vals.shape[1]
+    outer = (tile_vals.astype(acc)[:, :, None]
+             * b[tile_cols].astype(acc)[:, None, :])  # (T, Br, N)
+    blocks = jax.ops.segment_sum(outer, tile_rows, num_segments=nblocks)
+    return blocks.reshape(nblocks * br, b.shape[1]).astype(out_dtype)
+
+
+def dense_spmm(a_dense: jax.Array, b: jax.Array, out_dtype=None) -> jax.Array:
+    acc = acc_dtype_for(a_dense.dtype)
+    out_dtype = out_dtype or acc
+    return jax.lax.dot(a_dense, b,
+                       preferred_element_type=acc).astype(out_dtype)

@@ -1,0 +1,44 @@
+"""Production meshes.
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before* any jax
+initialisation and only then builds the mesh.
+
+Axis semantics:
+  pod   — data-parallel replica groups across pods (2 pods = 512 chips)
+  data  — in-pod data parallelism (batch + ZeRO-1 optimizer shards)
+  model — tensor/expert parallelism (Megatron col/row splits, EP, KV shards)
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType, Mesh
+
+__all__ = ["make_production_mesh", "make_test_mesh", "dp_axes", "flat_axes"]
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    import math
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    ndev = math.prod(shape)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes),
+                         devices=jax.devices()[:ndev])
+
+
+def make_test_mesh(data: int = 2, model: int = 2) -> Mesh:
+    """Small CPU mesh for integration tests (requires the host-device flag)."""
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)
+
+
+def dp_axes(mesh: Mesh):
+    """The data-parallel axis name(s): ('pod', 'data') on multi-pod meshes."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def flat_axes(mesh: Mesh):
+    """All axes, for fully-flat (ZeRO) sharding."""
+    return tuple(mesh.axis_names)

@@ -1,0 +1,64 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x shape) cell.
+
+No device allocation happens here: params, optimizer state, batches and
+caches are all abstract.  The dry-run lowers against exactly these avals.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..models import api
+
+__all__ = ["abstract_params", "train_batch_specs", "prefill_batch_specs",
+           "decode_input_specs"]
+
+I32 = jnp.int32
+F32 = jnp.float32
+
+
+def abstract_params(cfg: ModelConfig):
+    """Allocation-free param avals (jax.eval_shape over the real init)."""
+    return jax.eval_shape(lambda: api.init_params(cfg, jax.random.key(0)))
+
+
+def _frontend_extras(cfg: ModelConfig, lead: Tuple[int, ...]):
+    if cfg.frontend == "vision_stub":
+        return {"patches": jax.ShapeDtypeStruct(
+            (*lead, cfg.num_patches, cfg.d_model), F32)}
+    if cfg.frontend == "audio_stub":
+        return {"frames": jax.ShapeDtypeStruct(
+            (*lead, cfg.encoder_seq, cfg.d_model), F32)}
+    return {}
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig,
+                      n_microbatches: int) -> Dict[str, Any]:
+    """Microbatched layout: (n_mb, mb, ...)."""
+    mb = shape.global_batch // n_microbatches
+    lead = (n_microbatches, mb)
+    batch = {"tokens": jax.ShapeDtypeStruct((*lead, shape.seq_len), I32),
+             "labels": jax.ShapeDtypeStruct((*lead, shape.seq_len), I32)}
+    batch.update(_frontend_extras(cfg, lead))
+    return batch
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    B = shape.global_batch
+    batch = {"tokens": jax.ShapeDtypeStruct((B, shape.seq_len), I32)}
+    batch.update(_frontend_extras(cfg, (B,)))
+    return batch
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """(cache_avals, tokens_aval, length_aval) for one serve step against a
+    cache of ``seq_len`` entries."""
+    B = shape.global_batch
+    cache = jax.eval_shape(
+        lambda: api.init_cache(cfg, B, shape.seq_len))
+    tokens = jax.ShapeDtypeStruct((B, 1), I32)
+    length = jax.ShapeDtypeStruct((), I32)
+    return cache, tokens, length

@@ -1,0 +1,5 @@
+"""Model zoo substrate: shared layers + family implementations + unified API."""
+from . import api, encdec, frontends, layers, moe, rwkv6, sparse_ffn, ssm, transformer
+
+__all__ = ["api", "encdec", "frontends", "layers", "moe", "rwkv6",
+           "sparse_ffn", "ssm", "transformer"]

@@ -1,0 +1,34 @@
+"""Stub modality frontends (per assignment: ``[audio]``/``[vlm]`` entries
+specify the transformer BACKBONE only; the frontend provides precomputed
+frame/patch embeddings).
+
+These helpers generate concrete stub inputs for smoke tests / examples; the
+dry-run uses the matching ``ShapeDtypeStruct`` from ``launch.specs``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+
+__all__ = ["audio_frames_stub", "vision_patches_stub"]
+
+
+def audio_frames_stub(cfg: ModelConfig, batch: int, rng=None) -> jax.Array:
+    """Whisper conv frontend stub: (B, encoder_seq, d_model) frame embeds
+    (the real model downsamples 30 s of mel features to 1500 frames)."""
+    rng = rng if rng is not None else jax.random.key(0)
+    return 0.02 * jax.random.normal(
+        rng, (batch, cfg.encoder_seq, cfg.d_model), jnp.float32)
+
+
+def vision_patches_stub(cfg: ModelConfig, batch: int, rng=None) -> jax.Array:
+    """CLIP-style patch embedding stub: (B, num_patches, d_model).
+
+    phi-3-vision's real tower emits 576 patch features per 336px crop; we use
+    a 512-patch stub so the packed (patches + tokens) sequence stays
+    chunk-friendly (DESIGN.md records the simplification)."""
+    rng = rng if rng is not None else jax.random.key(0)
+    return 0.02 * jax.random.normal(
+        rng, (batch, cfg.num_patches, cfg.d_model), jnp.float32)

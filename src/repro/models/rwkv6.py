@@ -1,0 +1,166 @@
+"""RWKV-6 "Finch" block (attention-free, data-dependent decay).
+
+Faithful structure: token-shift ddlerp mixing, low-rank (LoRA) adapters for
+the five mixes and the decay, per-head matrix-valued state with
+data-dependent diagonal decay, bonus ``u`` term, per-head groupnorm, silu
+gate.  The recurrence
+
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    y_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+
+runs as a ``lax.scan`` over time for train/prefill and as a single-step
+update for decode (state is O(1) in sequence length — the reason rwkv6-3b
+runs the ``long_500k`` cell that full-attention archs skip).
+
+LOOPS applicability: none in the time-mix (dense square projections +
+elementwise recurrence; no sparse x dense product) — see DESIGN.md
+§Arch-applicability.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import F32, Params, dense_init, layernorm, layernorm_init, matmul
+
+__all__ = ["rwkv6_init", "rwkv6_forward", "rwkv6_decode_step", "rwkv6_state"]
+
+_MIXES = ("r", "k", "v", "w", "g")
+
+
+def rwkv6_init(rng, d_model: int, n_heads: int, dtype,
+               lora_rank: int = 32, decay_rank: int = 64) -> Params:
+    hd = d_model // n_heads
+    ks = jax.random.split(rng, 16)
+    p: Params = {
+        "mu_x": jnp.full((d_model,), 0.5, dtype),
+        # ddlerp LoRA: shared A, per-mix B
+        "mix_a": dense_init(ks[0], d_model, lora_rank * 5, dtype),
+        "mix_b": (jax.random.normal(ks[1], (5, lora_rank, d_model), F32)
+                  * 0.01).astype(dtype),
+        "mu": (jnp.tile(jnp.linspace(0.3, 0.7, 5)[:, None],
+                        (1, d_model))).astype(dtype),
+        "wr": dense_init(ks[2], d_model, d_model, dtype),
+        "wk": dense_init(ks[3], d_model, d_model, dtype),
+        "wv": dense_init(ks[4], d_model, d_model, dtype),
+        "wg": dense_init(ks[5], d_model, d_model, dtype),
+        "wo": dense_init(ks[6], d_model, d_model, dtype),
+        # decay: w_t = exp(-exp(w0 + lora)), data-dependent (the Finch bit)
+        "w0": jnp.full((d_model,), -2.0, dtype),
+        "decay_a": dense_init(ks[7], d_model, decay_rank, dtype),
+        "decay_b": (jax.random.normal(ks[8], (decay_rank, d_model), F32)
+                    * 0.01).astype(dtype),
+        "u": (jax.random.normal(ks[9], (n_heads, hd), F32) * 0.1).astype(dtype),
+        "ln_out": layernorm_init(d_model, dtype),
+    }
+    return p
+
+
+def rwkv6_state(batch: int, n_heads: int, head_dim: int, dtype=jnp.float32):
+    """(prev_x, S): token-shift carry + per-head matrix state."""
+    return (jnp.zeros((batch, 0), dtype),  # placeholder; real init by caller
+            jnp.zeros((batch, n_heads, head_dim, head_dim), jnp.float32))
+
+
+def _mixed_inputs(p: Params, x: jax.Array, x_prev: jax.Array):
+    """ddlerp token-shift: five data-dependent interpolations of (x, x_prev).
+
+    x, x_prev: (B, T, d).  Returns dict mix -> (B, T, d).
+    """
+    dx = x_prev - x
+    xx = x + dx * p["mu_x"].astype(x.dtype)
+    lora = jnp.tanh(matmul(xx, p["mix_a"]))            # (B, T, 5r)
+    B, T, _ = lora.shape
+    r5 = lora.reshape(B, T, 5, -1)
+    adj = jnp.einsum("btfr,frd->btfd", r5.astype(F32),
+                     p["mix_b"].astype(F32)).astype(x.dtype)
+    mixed = {}
+    for i, name in enumerate(_MIXES):
+        mu_i = p["mu"][i].astype(x.dtype)
+        mixed[name] = x + dx * (mu_i + adj[:, :, i])
+    return mixed
+
+
+def _decay(p: Params, xw: jax.Array) -> jax.Array:
+    lora = matmul(jnp.tanh(matmul(xw, p["decay_a"])), p["decay_b"])
+    wraw = p["w0"].astype(F32) + lora.astype(F32)
+    return jnp.exp(-jnp.exp(wraw))  # (B, T, d) in (0, 1)
+
+
+def _wkv_scan(r, k, v, w, u, s0):
+    """r,k,v,w: (B, T, H, N); u: (H, N); s0: (B, H, N, N) -> y, sT.
+
+    §Perf note: bf16-streaming the xs was tried and REFUTED — the per-step
+    converts add backward-pass cast chains that tripled the measured traffic
+    (15.4 -> 55.6 s on train_4k); fp32 streaming restored."""
+    def step(s, inp):
+        rt, kt, vt, wt = inp  # (B, H, N) each
+        kv = kt[..., :, None] * vt[..., None, :]          # (B,H,N,N)
+        y = jnp.einsum("bhn,bhnm->bhm", rt,
+                       s + u[None, :, :, None] * kv)
+        s_new = wt[..., :, None] * s + kv
+        return s_new, y
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (r, k, v, w))
+    sT, ys = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(ys, 0, 1), sT  # (B, T, H, N)
+
+
+def rwkv6_forward(p: Params, x: jax.Array, n_heads: int,
+                  state: tuple | None = None):
+    """x: (B, T, d) -> (out, new_state).  state = (x_last, S)."""
+    B, T, d = x.shape
+    hd = d // n_heads
+    if state is None:
+        x_last = jnp.zeros((B, 1, d), x.dtype)
+        s0 = jnp.zeros((B, n_heads, hd, hd), F32)
+    else:
+        x_last, s0 = state
+        x_last = x_last.reshape(B, 1, d).astype(x.dtype)
+
+    x_prev = jnp.concatenate([x_last, x[:, :-1]], axis=1)
+    mixed = _mixed_inputs(p, x, x_prev)
+    r = matmul(mixed["r"], p["wr"]).reshape(B, T, n_heads, hd).astype(F32)
+    k = matmul(mixed["k"], p["wk"]).reshape(B, T, n_heads, hd).astype(F32)
+    v = matmul(mixed["v"], p["wv"]).reshape(B, T, n_heads, hd).astype(F32)
+    g = jax.nn.silu(matmul(mixed["g"], p["wg"]).astype(F32))
+    w = _decay(p, mixed["w"]).reshape(B, T, n_heads, hd)
+
+    y, sT = _wkv_scan(r, k, v, w, p["u"].astype(F32), s0)
+    y = y.reshape(B, T, d)
+    y = layernorm(p["ln_out"], y.astype(x.dtype))
+    out = matmul((y.astype(F32) * g).astype(x.dtype), p["wo"])
+    return out, (x[:, -1], sT)
+
+
+def rwkv6_decode_step(p: Params, x: jax.Array, n_heads: int, state: tuple):
+    """Single token: x (B, 1, d)."""
+    return rwkv6_forward(p, x, n_heads, state)
+
+
+# ---------------------------------------------------------------------------
+# channel mix (RWKV's FFN: token-shifted, relu^2, receptance-gated)
+# ---------------------------------------------------------------------------
+
+def channel_mix_init(rng, d_model: int, d_ff: int, dtype) -> Params:
+    ks = jax.random.split(rng, 3)
+    return {
+        "mu_k": jnp.full((d_model,), 0.5, dtype),
+        "mu_r": jnp.full((d_model,), 0.5, dtype),
+        "wk": dense_init(ks[0], d_model, d_ff, dtype),
+        "wv": dense_init(ks[1], d_ff, d_model, dtype),
+        "wr": dense_init(ks[2], d_model, d_model, dtype),
+    }
+
+
+def channel_mix(p: Params, x: jax.Array, x_last: jax.Array | None):
+    """x: (B, T, d); x_last: (B, d) carry from the previous segment."""
+    B, T, d = x.shape
+    if x_last is None:
+        x_last = jnp.zeros((B, d), x.dtype)
+    x_prev = jnp.concatenate([x_last[:, None], x[:, :-1]], axis=1)
+    xk = x + (x_prev - x) * p["mu_k"].astype(x.dtype)
+    xr = x + (x_prev - x) * p["mu_r"].astype(x.dtype)
+    k = jnp.square(jax.nn.relu(matmul(xk, p["wk"]).astype(F32))).astype(x.dtype)
+    r = jax.nn.sigmoid(matmul(xr, p["wr"]).astype(F32)).astype(x.dtype)
+    return r * matmul(k, p["wv"]), x[:, -1]

@@ -1,0 +1,104 @@
+"""Weight-sparse FFN executed through LOOPS SpMM — the paper's technique as a
+first-class LM feature (DESIGN.md §Arch-applicability).
+
+A magnitude-pruned linear layer stores its weight as a LOOPS hybrid format:
+the *structure* (row_ptr/col_idx/tile indices) is static host-side metadata;
+the *values* (CSR vals + BCSR tile vals) are trainable pytree leaves.  The
+forward pass is
+
+    y = (W_loops @ x^T)^T        # SpMM with the activation as the dense B
+
+so the hot loop is exactly the paper's kernel pair: irregular weight rows on
+the vector pipeline, regular rows as Br x 1 outer-product tiles on the matrix
+pipeline.
+
+Differentiation note: training runs the ``jnp`` (reference) backend — the
+Pallas kernels target inference/serving and carry no custom VJP; both share
+the same format, so a model trained on the reference path serves on the
+Pallas path bit-for-bit (tests assert this).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.formats import CSR, LoopsFormat, csr_from_dense, loops_from_csr
+from ..core.spmm import plan_and_convert
+from ..kernels import ref
+from ..kernels.bcsr_spmm import bcsr_spmm_pallas
+from ..kernels.csr_spmm import csr_spmm_pallas
+from .layers import F32, Params
+
+__all__ = ["SparseLinear", "sparse_linear_from_dense", "magnitude_prune",
+           "sparse_linear_apply"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SparseLinear:
+    """Static structure of one pruned linear (d_out x d_in)."""
+
+    fmt: LoopsFormat          # holds the *initial* values; live values in params
+    d_in: int
+    d_out: int
+
+    def init_values(self) -> Params:
+        return {"csr_vals": jnp.asarray(self.fmt.csr_part.vals),
+                "bcsr_vals": jnp.asarray(self.fmt.bcsr_part.tile_vals)}
+
+
+def magnitude_prune(w: np.ndarray, sparsity: float) -> np.ndarray:
+    """Zero out the smallest-|w| fraction ``sparsity`` of entries."""
+    flat = np.abs(w).ravel()
+    k = int(len(flat) * sparsity)
+    if k == 0:
+        return w
+    thresh = np.partition(flat, k)[k]
+    return np.where(np.abs(w) >= thresh, w, 0.0).astype(w.dtype)
+
+
+def sparse_linear_from_dense(w: np.ndarray, sparsity: float, *,
+                             total_workers: int = 8) -> SparseLinear:
+    """Prune a dense (d_out, d_in) weight and convert to LOOPS format."""
+    pruned = magnitude_prune(np.asarray(w), sparsity)
+    csr = csr_from_dense(pruned)
+    fmt, _ = plan_and_convert(csr, total_workers=total_workers)
+    return SparseLinear(fmt=fmt, d_in=w.shape[1], d_out=w.shape[0])
+
+
+def sparse_linear_apply(layer: SparseLinear, values: Params, x: jax.Array,
+                        *, backend: str = "jnp") -> jax.Array:
+    """x: (..., d_in) -> (..., d_out) via LOOPS SpMM with live values."""
+    lead = x.shape[:-1]
+    xt = x.reshape(-1, layer.d_in).T           # (d_in, T) dense operand B
+    fmt = layer.fmt
+    out_dtype = ref.acc_dtype_for(values["csr_vals"].dtype)
+    parts = []
+    if fmt.r_boundary > 0:
+        csr = fmt.csr_part
+        row_ids, col_idx = jnp.asarray(csr.row_ids), jnp.asarray(csr.col_idx)
+        if backend == "jnp":
+            parts.append(ref.csr_spmm_ref(row_ids, col_idx,
+                                          values["csr_vals"], xt, csr.nrows,
+                                          out_dtype=out_dtype))
+        else:
+            parts.append(csr_spmm_pallas(row_ids, col_idx,
+                                         values["csr_vals"], xt,
+                                         nrows=csr.nrows, out_dtype=out_dtype,
+                                         interpret=(backend == "interpret")))
+    if fmt.r_boundary < fmt.nrows:
+        b = fmt.bcsr_part
+        trows, tcols = jnp.asarray(b.tile_rows), jnp.asarray(b.tile_cols)
+        if backend == "jnp":
+            padded = ref.bcsr_spmm_ref(trows, tcols, values["bcsr_vals"], xt,
+                                       b.nblocks, out_dtype=out_dtype)
+        else:
+            padded = bcsr_spmm_pallas(trows, tcols, values["bcsr_vals"], xt,
+                                      nblocks=b.nblocks, out_dtype=out_dtype,
+                                      interpret=(backend == "interpret"))
+        parts.append(padded[:b.nrows])
+    y = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=0)
+    return y.T.reshape(*lead, layer.d_out).astype(x.dtype)

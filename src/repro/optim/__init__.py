@@ -1,0 +1,2 @@
+"""Optimizers: AdamW with fully-flat ZeRO-1 state sharding."""
+from .adamw import OptConfig, init_opt_state, abstract_opt_state, opt_specs, apply_updates, lr_at

@@ -1,0 +1,150 @@
+"""AdamW with fully-flat ZeRO-1 state sharding (pure JAX).
+
+Every parameter's optimizer triple (fp32 master copy, first and second
+moments) lives in a *flat* representation: ravel -> pad -> reshape
+``(n_shards, -1)`` with the leading dim sharded over **all** mesh axes.  A
+34B-param model's 408 GB of fp32 Adam state becomes ~0.8 GB per chip on a
+512-chip mesh — the difference between fitting and not fitting v5e HBM.
+
+Data flow per step (the ZeRO-1 schedule, expressed as sharding constraints
+that XLA lowers to reduce-scatter + all-gather):
+  bf16 grads (model-sharded, data-replicated)
+    -> flatten + constrain to P((all axes), None)   [reduce-scatter]
+    -> Adam update on flat shards (elementwise, no comms)
+    -> unflatten + constrain to the param's spec     [all-gather]
+
+Gradient accumulation happens *in the flat fp32 layout*, so the accumulator
+costs |params| * 4 / n_devices bytes and each microbatch's reduce-scatter
+overlaps with the next microbatch's compute under the XLA latency-hiding
+scheduler.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..launch.mesh import flat_axes
+
+F32 = jnp.float32
+
+__all__ = ["OptConfig", "init_opt_state", "opt_specs", "apply_updates",
+           "to_flat", "from_flat", "lr_at"]
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def lr_at(opt: OptConfig, step):
+    """Linear warmup + cosine decay."""
+    step = step.astype(F32) if hasattr(step, "astype") else float(step)
+    warm = jnp.minimum(step / max(opt.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - opt.warmup_steps)
+                    / max(opt.total_steps - opt.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    frac = opt.min_lr_frac + (1 - opt.min_lr_frac) * cos
+    return opt.lr * warm * frac
+
+
+def _flat_cols(size: int, n_shards: int) -> int:
+    return math.ceil(size / n_shards)
+
+
+def to_flat(x: jax.Array, n_shards: int) -> jax.Array:
+    """(…shape…) -> fp32 (n_shards, cols), zero-padded."""
+    cols = _flat_cols(x.size, n_shards)
+    flat = jnp.ravel(x).astype(F32)
+    flat = jnp.pad(flat, (0, n_shards * cols - x.size))
+    return flat.reshape(n_shards, cols)
+
+
+def from_flat(flat: jax.Array, shape, dtype) -> jax.Array:
+    size = math.prod(shape) if shape else 1
+    return flat.reshape(-1)[:size].reshape(shape).astype(dtype)
+
+
+def init_opt_state(params, n_shards: int):
+    """Flat ZeRO state: master fp32 + m + v per param, plus the step count."""
+    def triple(x):
+        master = to_flat(x, n_shards)
+        return {"master": master, "m": jnp.zeros_like(master),
+                "v": jnp.zeros_like(master)}
+    return {"flat": jax.tree.map(triple, params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def abstract_opt_state(params_avals, n_shards: int):
+    """ShapeDtypeStruct version (dry-run: no allocation)."""
+    def triple(x):
+        cols = _flat_cols(x.size, n_shards)
+        s = jax.ShapeDtypeStruct((n_shards, cols), F32)
+        return {"master": s, "m": s, "v": s}
+    return {"flat": jax.tree.map(triple, params_avals),
+            "count": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def opt_specs(params_avals, mesh: Mesh):
+    """PartitionSpecs for the opt state: flat leaves over ALL mesh axes."""
+    axes = flat_axes(mesh)
+    flat_spec = P(axes, None)
+    def triple(_):
+        return {"master": flat_spec, "m": flat_spec, "v": flat_spec}
+    return {"flat": jax.tree.map(triple, params_avals),
+            "count": P()}
+
+
+def global_norm_flat(flat_tree) -> jax.Array:
+    leaves = jax.tree.leaves(flat_tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g)) for g in leaves))
+
+
+def apply_updates(params, opt_state, grads_flat, opt: OptConfig,
+                  param_specs_tree, mesh: Mesh):
+    """One AdamW step on flat shards; returns (new_params, new_opt_state,
+    grad_norm).  ``grads_flat`` must already be in the flat fp32 layout."""
+    count = opt_state["count"] + 1
+    lr = lr_at(opt, count)
+    gnorm = global_norm_flat(grads_flat)
+    scale = jnp.minimum(1.0, opt.clip_norm / jnp.maximum(gnorm, 1e-12))
+    b1, b2 = opt.beta1, opt.beta2
+    bc1 = 1 - b1 ** count.astype(F32)
+    bc2 = 1 - b2 ** count.astype(F32)
+
+    def upd(tr, g):
+        g = g * scale
+        m = b1 * tr["m"] + (1 - b1) * g
+        v = b2 * tr["v"] + (1 - b2) * jnp.square(g)
+        mh = m / bc1
+        vh = v / bc2
+        step_ = mh / (jnp.sqrt(vh) + opt.eps) + opt.weight_decay * tr["master"]
+        master = tr["master"] - lr * step_
+        return {"master": master, "m": m, "v": v}
+
+    new_flat = jax.tree.map(upd, opt_state["flat"], grads_flat,
+                            is_leaf=lambda x: isinstance(x, dict)
+                            and "master" in x)
+
+    def unflatten(tr, x, spec):
+        y = from_flat(tr["master"], x.shape, x.dtype)
+        return jax.lax.with_sharding_constraint(y, NamedSharding(mesh, spec))
+
+    new_params = jax.tree.map(
+        lambda tr, x, s: unflatten(tr, x, s), new_flat, params,
+        param_specs_tree,
+        is_leaf=lambda x: isinstance(x, dict) and "master" in x)
+    return new_params, {"flat": new_flat, "count": count}, gnorm

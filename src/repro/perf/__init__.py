@@ -1,0 +1,1 @@
+"""Perf tooling: HLO analysis for roofline terms."""

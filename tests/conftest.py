@@ -1,0 +1,20 @@
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, settings
+
+# Deterministic, CI-friendly hypothesis profile (interpret-mode kernels are
+# slow per-example; keep example counts modest).
+settings.register_profile(
+    "repro", max_examples=25, deadline=None,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large])
+settings.load_profile("repro")
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def random_sparse(rng, m, k, density, dtype=np.float32):
+    a = (rng.random((m, k)) < density) * rng.standard_normal((m, k))
+    return a.astype(dtype)

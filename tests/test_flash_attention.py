@@ -1,0 +1,59 @@
+"""Fused flash-attention Pallas kernel vs the XLA chunked oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.models.layers import flash_attention
+
+
+def _qkv(rng, B, Sq, Sk, H, KV, hd, dtype):
+    q = jnp.asarray(rng.standard_normal((B, Sq, H, hd)), dtype)
+    k = jnp.asarray(rng.standard_normal((B, Sk, KV, hd)), dtype)
+    v = jnp.asarray(rng.standard_normal((B, Sk, KV, hd)), dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 2e-5),
+                                       (jnp.bfloat16, 3e-2)])
+@pytest.mark.parametrize("B,S,H,KV,hd", [
+    (1, 64, 1, 1, 16), (2, 128, 4, 2, 32), (1, 64, 6, 2, 16),
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_kernel_matches_xla(rng, dtype, tol, B, S, H, KV, hd, causal):
+    q, k, v = _qkv(rng, B, S, S, H, KV, hd, dtype)
+    got = flash_attention_pallas(q, k, v, causal=causal, block_q=32,
+                                 block_k=32, interpret=True)
+    want = flash_attention(q, k, v, causal=causal, q_chunk=32, k_chunk=32)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_block_shape_invariance(rng):
+    q, k, v = _qkv(rng, 1, 128, 128, 2, 2, 16, jnp.float32)
+    outs = [flash_attention_pallas(q, k, v, causal=True, block_q=bq,
+                                   block_k=bk, interpret=True)
+            for (bq, bk) in [(32, 32), (64, 32), (128, 128)]]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_against_naive_softmax(rng):
+    """Ground truth: full softmax(QK^T)V."""
+    B, S, H, hd = 1, 64, 2, 16
+    q, k, v = _qkv(rng, B, S, S, H, H, hd, jnp.float32)
+    got = flash_attention_pallas(q, k, v, causal=True, block_q=16,
+                                 block_k=16, interpret=True)
+    qf = np.asarray(q, np.float32)
+    kf = np.asarray(k, np.float32)
+    vf = np.asarray(v, np.float32)
+    s = np.einsum("bqhd,bkhd->bhqk", qf, kf) / np.sqrt(hd)
+    mask = np.tril(np.ones((S, S), bool))
+    s = np.where(mask, s, -1e30)
+    p = np.exp(s - s.max(-1, keepdims=True))
+    p /= p.sum(-1, keepdims=True)
+    want = np.einsum("bhqk,bkhd->bqhd", p, vf)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-5, atol=2e-5)

@@ -1,0 +1,90 @@
+"""Format construction: CSR round-trip, Algorithm 1 conversion, invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core import (bcsr_from_csr_rows, csr_from_coo, csr_from_dense,
+                        csr_to_dense, loops_from_csr, row_stats)
+
+
+def _rand_dense(seed, m, k, density):
+    rng = np.random.default_rng(seed)
+    return ((rng.random((m, k)) < density)
+            * rng.standard_normal((m, k))).astype(np.float32)
+
+
+def _loops_to_dense(fmt):
+    """Reassemble a dense matrix from the hybrid format."""
+    out = np.zeros(fmt.shape, np.float32)
+    c = fmt.csr_part
+    np.add.at(out[:fmt.r_boundary], (c.row_ids, c.col_idx), c.vals)
+    b = fmt.bcsr_part
+    for t in range(b.ntiles):
+        r0 = fmt.r_boundary + int(b.tile_rows[t]) * b.br
+        col = int(b.tile_cols[t])
+        for i in range(b.br):
+            if r0 + i < fmt.shape[0]:
+                out[r0 + i, col] += b.tile_vals[t, i]
+    return out
+
+
+def test_csr_round_trip():
+    a = _rand_dense(0, 23, 17, 0.2)
+    assert np.array_equal(csr_to_dense(csr_from_dense(a)), a)
+
+
+def test_csr_empty_rows_padded():
+    a = np.zeros((5, 4), np.float32)
+    a[1, 2] = 3.0
+    csr = csr_from_dense(a)
+    counts = np.diff(csr.row_ptr)
+    assert (counts >= 1).all()  # every row visited (kernel contract)
+    assert np.array_equal(csr_to_dense(csr), a)
+
+
+@given(st.integers(0, 6), st.integers(1, 40), st.integers(1, 30),
+       st.sampled_from([0.0, 0.05, 0.3, 0.9]), st.sampled_from([2, 4, 8]))
+def test_loops_conversion_value_preserving(seed, m, k, density, br):
+    """Algorithm 1 must preserve every value for ANY r_boundary."""
+    a = _rand_dense(seed, m, k, density)
+    csr = csr_from_dense(a)
+    for r_b in {0, m // 2, m}:
+        fmt = loops_from_csr(csr, r_b, br)
+        np.testing.assert_allclose(_loops_to_dense(fmt), a, rtol=1e-6)
+
+
+@given(st.integers(0, 5), st.integers(1, 50), st.sampled_from([2, 8]))
+def test_bcsr_invariants(seed, m, br):
+    a = _rand_dense(seed, m, m, 0.2)
+    csr = csr_from_dense(a)
+    b = bcsr_from_csr_rows(csr, 0, m, br)
+    # tiles sorted by (block_row, col); every block-row represented
+    rows = b.tile_rows
+    assert (np.diff(rows) >= 0).all()
+    assert set(range(b.nblocks)) <= set(rows.tolist())
+    assert b.nblocks == max((m + br - 1) // br, 1)
+    # block_ptr consistent with tile_rows
+    counts = np.bincount(rows, minlength=b.nblocks)
+    assert np.array_equal(np.diff(b.block_ptr), counts)
+
+
+def test_row_stats_matches_numpy():
+    a = _rand_dense(1, 64, 32, 0.15)
+    csr = csr_from_dense(a)
+    s = row_stats(csr)
+    counts = (a != 0).sum(1)
+    # stats include structural pads for empty rows; only compare when no
+    # empty rows exist
+    if (counts > 0).all():
+        assert s.nnz_max == counts.max()
+        assert abs(s.nnz_mean - counts.mean()) < 1e-9
+
+
+def test_coo_duplicate_accumulation():
+    rows = [0, 0, 1]
+    cols = [1, 1, 0]
+    vals = [2.0, 3.0, 4.0]
+    csr = csr_from_coo(rows, cols, vals, (2, 2))
+    dense = csr_to_dense(csr)
+    assert dense[0, 1] == pytest.approx(5.0)
+    assert dense[1, 0] == pytest.approx(4.0)

@@ -1,0 +1,107 @@
+"""Per-kernel sweeps: Pallas (interpret=True) vs the pure-jnp oracle, over
+shapes x dtypes x sparsity patterns."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import csr_from_dense, loops_from_csr
+from repro.kernels import ref
+from repro.kernels.bcsr_spmm import bcsr_spmm_pallas
+from repro.kernels.csr_spmm import csr_spmm_pallas
+
+DTYPES = [(jnp.float32, 1e-5), (jnp.bfloat16, 3e-2)]
+SHAPES = [(1, 1, 4), (7, 5, 8), (16, 16, 16), (33, 29, 32), (40, 64, 128)]
+DENSITIES = [0.02, 0.2, 0.7]
+
+
+def _sparse(rng, m, k, density, dtype):
+    a = ((rng.random((m, k)) < density) * rng.standard_normal((m, k)))
+    return np.asarray(jnp.asarray(a, dtype))
+
+
+@pytest.mark.parametrize("dtype,tol", DTYPES)
+@pytest.mark.parametrize("m,k,n", SHAPES)
+@pytest.mark.parametrize("density", DENSITIES)
+def test_csr_kernel_matches_ref(rng, dtype, tol, m, k, n, density):
+    a = _sparse(rng, m, k, density, dtype)
+    b = jnp.asarray(rng.standard_normal((k, n)), dtype)
+    csr = csr_from_dense(a)
+    row_ids = jnp.asarray(csr.row_ids)
+    col_idx = jnp.asarray(csr.col_idx)
+    vals = jnp.asarray(csr.vals)
+    got = csr_spmm_pallas(row_ids, col_idx, vals, b, nrows=m, interpret=True)
+    want = ref.csr_spmm_ref(row_ids, col_idx, vals, b, m)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=tol)
+    # and against the dense ground truth
+    dense = np.asarray(a, np.float32) @ np.asarray(b, np.float32)
+    np.testing.assert_allclose(np.asarray(got), dense, rtol=10 * tol,
+                               atol=10 * tol)
+
+
+@pytest.mark.parametrize("dtype,tol", DTYPES)
+@pytest.mark.parametrize("m,k,n", SHAPES)
+@pytest.mark.parametrize("br", [2, 8])
+def test_bcsr_kernel_matches_ref(rng, dtype, tol, m, k, n, br):
+    a = _sparse(rng, m, k, 0.25, dtype)
+    b = jnp.asarray(rng.standard_normal((k, n)), dtype)
+    fmt = loops_from_csr(csr_from_dense(a), 0, br)  # pure BCSR
+    bc = fmt.bcsr_part
+    got = bcsr_spmm_pallas(jnp.asarray(bc.tile_rows),
+                           jnp.asarray(bc.tile_cols),
+                           jnp.asarray(bc.tile_vals), b,
+                           nblocks=bc.nblocks, interpret=True)
+    want = ref.bcsr_spmm_ref(jnp.asarray(bc.tile_rows),
+                             jnp.asarray(bc.tile_cols),
+                             jnp.asarray(bc.tile_vals), b, bc.nblocks)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=tol)
+    dense = np.asarray(a, np.float32) @ np.asarray(b, np.float32)
+    np.testing.assert_allclose(np.asarray(got)[:m], dense, rtol=10 * tol,
+                               atol=10 * tol)
+
+
+def test_fp64_kernels(rng):
+    """FP64 path (paper's highest precision) — needs x64."""
+    jax.config.update("jax_enable_x64", True)
+    try:
+        m, k, n = 19, 13, 8
+        a = _sparse(rng, m, k, 0.3, jnp.float64)
+        b = jnp.asarray(rng.standard_normal((k, n)), jnp.float64)
+        csr = csr_from_dense(a)
+        got = csr_spmm_pallas(jnp.asarray(csr.row_ids),
+                              jnp.asarray(csr.col_idx),
+                              jnp.asarray(csr.vals), b, nrows=m,
+                              interpret=True)
+        np.testing.assert_allclose(np.asarray(got),
+                                   np.asarray(a) @ np.asarray(b), rtol=1e-12)
+        assert got.dtype == jnp.float64
+    finally:
+        jax.config.update("jax_enable_x64", False)
+
+
+def test_bn_blocking_equivalence(rng):
+    """Wider bn (the multi-ZA-tile analogue) must not change results."""
+    m, k, n = 24, 16, 64
+    a = _sparse(rng, m, k, 0.3, jnp.float32)
+    b = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+    csr = csr_from_dense(a)
+    args = (jnp.asarray(csr.row_ids), jnp.asarray(csr.col_idx),
+            jnp.asarray(csr.vals), b)
+    outs = [csr_spmm_pallas(*args, nrows=m, bn=bn, interpret=True)
+            for bn in (16, 32, 64)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o),
+                                   rtol=1e-6)
+
+
+def test_out_dtype_override(rng):
+    m, k, n = 8, 8, 8
+    a = _sparse(rng, m, k, 0.5, jnp.bfloat16)
+    b = jnp.asarray(rng.standard_normal((k, n)), jnp.bfloat16)
+    csr = csr_from_dense(a)
+    out = csr_spmm_pallas(jnp.asarray(csr.row_ids), jnp.asarray(csr.col_idx),
+                          jnp.asarray(csr.vals), b, nrows=m,
+                          out_dtype=jnp.bfloat16, interpret=True)
+    assert out.dtype == jnp.bfloat16

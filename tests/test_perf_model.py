@@ -1,0 +1,48 @@
+"""Quadratic performance model (Eq. 2) + scheduler (Eq. 3) properties."""
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core.perf_model import (QuadraticPerfModel, calibrate,
+                                   default_candidates, fit_perf_model)
+
+
+def test_fit_recovers_exact_quadratic():
+    coef = np.array([1.0, 2.0, -0.5, -0.1, -0.2])
+    xs = [(x, y) for x in range(5) for y in range(5)]
+    m = QuadraticPerfModel(coef)
+    fit = fit_perf_model(xs, [m.predict(x, y) for x, y in xs])
+    np.testing.assert_allclose(fit.coef, coef, atol=1e-8)
+
+
+@given(st.tuples(*[st.floats(-2, 2) for _ in range(5)]), st.integers(1, 12))
+def test_argmax_matches_brute_force(coef, total):
+    m = QuadraticPerfModel(np.asarray(coef))
+    x, y = m.best_allocation(total)
+    assert 0 < x + y <= total
+    best = max(float(m.predict(a, b))
+               for a in range(total + 1) for b in range(total + 1 - a)
+               if a + b > 0)
+    assert float(m.predict(x, y)) == pytest.approx(best)
+
+
+def test_calibrate_finds_contention_optimum():
+    """Paper §4.3 scenario: SME(y) throughput saturates past 1 worker
+    (shared-unit contention); the scheduler must not over-allocate it."""
+    def measure(x, y):
+        return 1.0 * x + (4.0 * min(y, 1) + 0.25 * max(y - 1, 0))
+    model = calibrate(measure, total=8)
+    x, y = model.best_allocation(8)
+    assert y <= 4  # fitted quadratic discourages piling onto the matrix unit
+    assert x >= 4
+
+
+def test_default_candidates_valid():
+    for t in (1, 2, 8, 12):
+        for (x, y) in default_candidates(t):
+            assert 0 < x + y <= t
+
+
+def test_fit_requires_enough_samples():
+    with pytest.raises(ValueError):
+        fit_perf_model([(0, 0), (1, 1)], [0.0, 1.0])

@@ -1,0 +1,55 @@
+"""The paper's technique inside the LM: pruned linear via LOOPS SpMM."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.sparse_ffn import (magnitude_prune, sparse_linear_apply,
+                                     sparse_linear_from_dense)
+
+
+def test_magnitude_prune_levels(rng):
+    w = rng.standard_normal((64, 64)).astype(np.float32)
+    for s in (0.0, 0.5, 0.9):
+        pruned = magnitude_prune(w, s)
+        frac = (pruned == 0).mean()
+        assert frac == pytest.approx(s, abs=0.05)
+
+
+@pytest.mark.parametrize("sparsity", [0.5, 0.9])
+def test_sparse_linear_matches_pruned_dense(rng, sparsity):
+    w = rng.standard_normal((24, 16)).astype(np.float32)
+    layer = sparse_linear_from_dense(w, sparsity)
+    vals = layer.init_values()
+    x = jnp.asarray(rng.standard_normal((5, 16)), jnp.float32)
+    got = sparse_linear_apply(layer, vals, x, backend="jnp")
+    want = x @ magnitude_prune(w, sparsity).T
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_ref_and_pallas_backends_agree(rng):
+    """Train-on-ref / serve-on-Pallas contract: identical outputs."""
+    w = rng.standard_normal((32, 16)).astype(np.float32)
+    layer = sparse_linear_from_dense(w, 0.7)
+    vals = layer.init_values()
+    x = jnp.asarray(rng.standard_normal((4, 16)), jnp.float32)
+    a = sparse_linear_apply(layer, vals, x, backend="jnp")
+    b = sparse_linear_apply(layer, vals, x, backend="interpret")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_values_are_trainable(rng):
+    """Grads flow to the LOOPS value arrays (structure stays fixed)."""
+    w = rng.standard_normal((16, 12)).astype(np.float32)
+    layer = sparse_linear_from_dense(w, 0.5)
+    vals = layer.init_values()
+    x = jnp.asarray(rng.standard_normal((3, 12)), jnp.float32)
+
+    def loss(v):
+        return jnp.sum(sparse_linear_apply(layer, v, x, backend="jnp") ** 2)
+
+    g = jax.grad(loss)(vals)
+    gn = sum(float(jnp.abs(t).sum()) for t in jax.tree.leaves(g))
+    assert np.isfinite(gn) and gn > 0
