@@ -10,6 +10,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.compat import make_mesh, shard_map
 from repro.dist.compress import compressed_psum
 from repro.perf.hlo_analysis import analyze_hlo
 
@@ -17,20 +18,22 @@ from ._util import csv_row
 
 
 def main(out=print):
-    mesh = jax.make_mesh((16,), ("d",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((16,), ("d",))
     n = 1 << 22  # 4M fp32 grads per device (a ~16M-param shard)
     x = jax.ShapeDtypeStruct((16, n), jnp.float32)
     from jax.sharding import PartitionSpec as P
 
     def bytes_of(fn):
-        f = jax.shard_map(fn, mesh=mesh, in_specs=P("d"), out_specs=P("d"))
+        f = shard_map(fn, mesh=mesh, in_specs=P("d"), out_specs=P("d"))
         c = jax.jit(f).lower(x).compile()
         return analyze_hlo(c.as_text()).collective_bytes
 
     b_fp32 = bytes_of(lambda xs: jax.lax.psum(xs[0], "d")[None])
+    b_bf16 = bytes_of(lambda xs: compressed_psum(xs[0], "d", "bf16")[None])
     b_int8 = bytes_of(lambda xs: compressed_psum(xs[0], "d")[None])
     out(csv_row("compress_psum_fp32_bytes", 0.0, f"{b_fp32:.3e}"))
+    out(csv_row("compress_psum_bf16_bytes", 0.0,
+                f"{b_bf16:.3e};reduction={b_fp32 / max(b_bf16, 1):.2f}x"))
     out(csv_row("compress_psum_int8_bytes", 0.0,
                 f"{b_int8:.3e};reduction={b_fp32 / max(b_int8, 1):.2f}x"))
 

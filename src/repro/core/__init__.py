@@ -12,7 +12,8 @@ from .perf_model import (QuadraticPerfModel, best_allocation, calibrate,
                          fit_perf_model)
 from .spmm import (SpmmPlan, loops_spmm, plan_and_convert, spmm_csr_baseline,
                    spmm_dense_baseline)
-from .distributed import ShardedLoops, distributed_spmm, shard_loops
+from .distributed import (ShardedLoops, distributed_spmm, shard_loops,
+                          shard_loops_auto)
 
 __all__ = [
     "CSR", "LoopsFormat", "VectorBCSR", "bcsr_from_csr_rows", "csr_from_coo",
@@ -21,4 +22,5 @@ __all__ = [
     "best_allocation", "calibrate", "fit_perf_model", "SpmmPlan",
     "loops_spmm", "plan_and_convert", "spmm_csr_baseline",
     "spmm_dense_baseline", "ShardedLoops", "distributed_spmm", "shard_loops",
+    "shard_loops_auto",
 ]

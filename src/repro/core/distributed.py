@@ -19,17 +19,21 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Tuple
+from typing import Callable, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
+from ..compat import shard_map
+from ..dist.sharding import loops_in_specs, loops_out_spec
 from ..kernels import ref
 from .formats import LoopsFormat
+from .perf_model import QuadraticPerfModel
 
-__all__ = ["ShardedLoops", "shard_loops", "distributed_spmm"]
+__all__ = ["ShardedLoops", "shard_loops", "shard_loops_auto",
+           "distributed_spmm"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -135,6 +139,50 @@ def shard_loops(fmt: LoopsFormat, num_devices: int, g_vpu: int) -> ShardedLoops:
         rows_pad=rows_pad, g_vpu=g_vpu, br=bcsr.br, shape=fmt.shape)
 
 
+def shard_loops_auto(fmt: LoopsFormat, num_devices: int, *,
+                     model: QuadraticPerfModel | None = None,
+                     measure: Callable[[int, int], float] | None = None
+                     ) -> ShardedLoops:
+    """Coarse-level scheduling (paper §3.5.3): let the quadratic perf model
+    pick the (vector-group, matrix-group) *device* split, then shard.
+
+    This is Eq. 3's argmax applied one level up from threads: ``x`` devices
+    run the CSR(vector) kernel on the irregular region, ``y = D - x`` run the
+    BCSR(matrix) kernel on the regular region.  ``model`` is a pre-fitted
+    :class:`~repro.core.perf_model.QuadraticPerfModel`; alternatively pass
+    ``measure(x, y) -> perf`` to calibrate one from warm-up probes (wall
+    clock at small scale, roofline terms from the dry-run at production
+    scale).  With neither, the split falls back to proportional nnz weight —
+    the same default as ``plan_and_convert``'s thread-level path.
+    """
+    has_csr = fmt.r_boundary > 0
+    has_bcsr = fmt.r_boundary < fmt.nrows
+    if num_devices < 2 and has_csr and has_bcsr:
+        # one device cannot host two disjoint groups; the single-device
+        # hybrid path is core.spmm.loops_spmm
+        raise ValueError("shard_loops_auto needs >= 2 devices when both the "
+                         "CSR and BCSR regions are non-empty; use "
+                         "loops_spmm for single-device execution")
+    if model is None and measure is not None:
+        from .perf_model import calibrate
+        model = calibrate(measure, num_devices)
+    if model is not None:
+        # best_allocation may leave devices idle (x + y < D); only the
+        # ratio matters here, every device gets a chunk of its group's work
+        g_vpu, _ = model.best_allocation(num_devices)
+    else:
+        nnz_csr = int(np.count_nonzero(fmt.csr_part.vals))
+        nnz_b = int(np.count_nonzero(fmt.bcsr_part.tile_vals))
+        total = max(nnz_csr + nnz_b, 1)
+        g_vpu = int(round(num_devices * nnz_csr / total))
+    if has_csr:
+        g_vpu = max(g_vpu, 1)
+    if has_bcsr:
+        g_vpu = min(g_vpu, num_devices - 1)
+    g_vpu = int(np.clip(g_vpu, 0, num_devices))
+    return shard_loops(fmt, num_devices, g_vpu)
+
+
 def distributed_spmm(sharded: ShardedLoops, b: jax.Array, mesh: Mesh,
                      axis="model", assemble: bool = True) -> jax.Array:
     """Run the two-level schedule on ``mesh[axis]``; returns the global C.
@@ -152,15 +200,13 @@ def distributed_spmm(sharded: ShardedLoops, b: jax.Array, mesh: Mesh,
     D = 1
     for a in axes:
         D *= mesh.shape[a]
-    axis = axes if len(axes) > 1 else axes[0]
     rows_pad, br = sharded.rows_pad, sharded.br
     nblocks_pad = (rows_pad + br - 1) // br
 
     @partial(
-        jax.shard_map, mesh=mesh,
-        in_specs=(P(axis), P(axis), P(axis), P(axis), P(axis), P(axis),
-                  P()),
-        out_specs=P(axis))
+        shard_map, mesh=mesh,
+        in_specs=loops_in_specs(axes),
+        out_specs=loops_out_spec(axes))
     def run(row_ids, col_idx, vals, tile_rows, tile_cols, tile_vals, bloc):
         row_ids, col_idx, vals = row_ids[0], col_idx[0], vals[0]
         tile_rows, tile_cols, tile_vals = (tile_rows[0], tile_cols[0],

@@ -1,0 +1,34 @@
+"""Device-level distribution layer (sharding specs, step functions,
+compressed collectives).
+
+This package is the TPU-mesh analogue of the paper's §3.5 two-level
+parallelization: the *coarse* level (the paper's disjoint NEON/SME thread
+groups) becomes device groups and mesh-axis shardings, the *fine* level
+stays inside each device's kernel grid.  Three modules:
+
+* :mod:`repro.dist.sharding` — mesh-axis conventions and every
+  ``PartitionSpec``/``NamedSharding`` in the system (params, batches,
+  KV-caches, ZeRO flat state, LOOPS row shards);
+* :mod:`repro.dist.step` — jitted + donating train / prefill / decode step
+  builders consumed by ``launch/train.py``, ``launch/serve.py`` and the
+  ``launch/dryrun.py`` compile sweep;
+* :mod:`repro.dist.compress` — ``compressed_psum``, int8/bf16 gradient
+  all-reduce compression (measured by ``benchmarks/compress_bytes.py``).
+
+Submodules load lazily (PEP 562): ``repro.core.distributed`` needs only the
+LOOPS specs from ``sharding``, and importing that must not drag the model /
+optimizer stack behind ``step`` into every ``import repro.core``.
+"""
+import importlib
+
+__all__ = ["compress", "sharding", "step"]
+
+
+def __getattr__(name):
+    if name in __all__:
+        return importlib.import_module(f".{name}", __name__)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(__all__)

@@ -1,0 +1,75 @@
+"""Compressed cross-device reductions (gradient all-reduce on a byte diet).
+
+``compressed_psum`` is a drop-in for ``jax.lax.psum`` inside ``shard_map``
+that moves int8 (or bf16) over the interconnect instead of fp32.  The int8
+path is the ZeRO++-style quantized all-reduce:
+
+  1. share one symmetric scale across the axis (a scalar ``pmax`` — the only
+     fp32 that crosses the wire besides the final gather),
+  2. quantize to int8 and **all-to-all** so each device receives every
+     peer's slice of its own 1/D-th of the vector (int8 on the wire),
+  3. accumulate locally in int32 — this is why a naive ``psum`` of int8
+     operands is unusable: XLA reduces in the operand dtype, and D devices
+     of ±127 overflow ±127 immediately; the all-to-all decomposition keeps
+     the wide accumulation off the wire and on the VPU,
+  4. dequantize and **all-gather** the reduced fp32 slices (4/D of the
+     fp32-psum bytes).
+
+Wire bytes per device: ``n`` (int8 all-to-all) + ``4n/D`` (fp32 all-gather)
+vs ``4n`` for an fp32 ring psum — ~3.2x fewer at D=16 (measured from
+optimized HLO by ``benchmarks/compress_bytes.py``).  Error: one rounding per
+element at a shared scale, so the reduced value carries at most
+``D * scale/2`` absolute error — ``tests/test_distributed.py`` bounds it at
+2% relative on gradient-like normals.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["compressed_psum"]
+
+F32 = jnp.float32
+
+
+def _int8_psum(x: jax.Array, axis_name: str, D: int) -> jax.Array:
+    flat = x.reshape(-1).astype(F32)
+    n = flat.size
+    pad = (-n) % D
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    # one shared symmetric scale per call: quantized values from different
+    # devices must be summable, so the scale cannot be per-device
+    amax = jax.lax.pmax(jnp.max(jnp.abs(flat)), axis_name)
+    scale = jnp.maximum(amax, jnp.finfo(F32).tiny) / 127.0
+    q = jnp.clip(jnp.round(flat / scale), -127, 127).astype(jnp.int8)
+    # row d of the (D, n/D) view is the slice device d will reduce
+    q = q.reshape(D, -1)
+    qx = jax.lax.all_to_all(q, axis_name, split_axis=0, concat_axis=0)
+    part = qx.astype(jnp.int32).sum(axis=0).astype(F32) * scale
+    full = jax.lax.all_gather(part, axis_name, tiled=True)
+    if pad:
+        full = full[:n]
+    return full.reshape(x.shape).astype(x.dtype)
+
+
+def compressed_psum(x: jax.Array, axis_name: str,
+                    precision: str = "int8") -> jax.Array:
+    """All-reduce ``x`` over ``axis_name`` with compressed communication.
+
+    ``precision``: ``"int8"`` (quantized all-to-all reduce, ~3-4x fewer
+    collective bytes), ``"bf16"`` (cast-psum-cast — 2x where the backend has
+    a native bf16 all-reduce; the CPU backend upcasts to f32, so
+    ``benchmarks/compress_bytes.py`` honestly reports 1.0x there), or
+    ``"none"`` (plain fp32 psum — the ablation baseline).
+
+    Must be called inside ``shard_map`` (it uses named-axis collectives).
+    """
+    D = jax.lax.psum(1, axis_name)
+    if precision == "none" or D == 1:
+        return jax.lax.psum(x, axis_name)
+    if precision == "bf16":
+        return jax.lax.psum(x.astype(jnp.bfloat16), axis_name).astype(x.dtype)
+    if precision != "int8":
+        raise ValueError(f"unknown compression precision: {precision!r}")
+    return _int8_psum(x, axis_name, D)

@@ -1,0 +1,269 @@
+"""Mesh-axis conventions and ``NamedSharding`` builders for the whole system.
+
+This module is the single place that knows how logical arrays map onto the
+meshes from :mod:`repro.launch.mesh` (axes ``pod`` / ``data`` / ``model``).
+Everything downstream — the train/serve step builders in
+:mod:`repro.dist.step`, the launch drivers, the dry-run — consumes the
+``PartitionSpec`` trees built here and never spells a mesh axis by hand.
+
+Conventions
+-----------
+* **params** (:func:`param_specs`) — Megatron-style tensor parallelism over
+  the ``model`` axis: column-split the up-projections (``wq``/``wk``/``wv``,
+  MLP ``wi``/``wg``), row-split the down-projections (``wo``), vocab-split
+  the (un)embeddings, expert-split stacked MoE weights.  The ``kv_aligned``
+  TP rule (the §Perf default, ablated in ``tests/test_perf_variants.py``)
+  replicates any projection whose head count does not divide the model axis,
+  so attention stays device-local; ``tp_rule="naive"`` shards blindly.
+* **activations / batches** (:func:`train_batch_specs`,
+  :func:`prefill_batch_specs`) — batch dim over the data-parallel axes
+  (``('pod', 'data')`` on multi-pod meshes), everything else unconstrained.
+* **KV-cache** (:func:`cache_specs`) — ``(L, B, S, KV, hd)`` leaves carry the
+  batch dim on the data axes and the KV-head dim on ``model`` when aligned;
+  SSM/RWKV state leaves shard on batch only.
+* **optimizer** — flat ZeRO-1 shards over *all* axes; the spec lives in
+  :func:`repro.optim.adamw.opt_specs`, re-exported here, and
+  :func:`flat_grad_specs` gives the matching gradient layout (the
+  reduce-scatter point of the ZeRO schedule).
+* **LOOPS operands** (:func:`loops_in_specs`, :func:`loops_shardings`) — the
+  device-stacked :class:`repro.core.distributed.ShardedLoops` arrays are
+  row-sharded (leading device axis) over the SpMM worker axis, composing the
+  paper's CSR-part/BCSR-part device-group split with mesh sharding; ``B`` is
+  replicated, matching the paper's broadcast of the dense operand.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig
+from ..launch.mesh import dp_axes, flat_axes
+from ..optim.adamw import opt_specs  # noqa: F401  (re-export: one spec home)
+
+__all__ = [
+    "model_axis", "model_size", "data_axis", "dp_size",
+    "param_specs", "train_batch_specs", "prefill_batch_specs", "cache_specs",
+    "logits_spec", "flat_grad_specs", "opt_specs",
+    "spec_to_sharding", "constrain",
+    "loops_in_specs", "loops_out_spec", "loops_shardings",
+]
+
+
+# ---------------------------------------------------------------------------
+# axis helpers
+# ---------------------------------------------------------------------------
+
+def model_axis(mesh) -> str | None:
+    """The tensor-parallel axis name, or None on a mesh without one."""
+    return "model" if "model" in mesh.axis_names else None
+
+
+def model_size(mesh) -> int:
+    m = model_axis(mesh)
+    return mesh.shape[m] if m else 1
+
+
+def data_axis(mesh):
+    """The data-parallel PartitionSpec entry: one name, or a tuple of names
+    (``('pod', 'data')``) that flattens all replica axes into one dim."""
+    axes = dp_axes(mesh)
+    if not axes:
+        return None
+    return axes[0] if len(axes) == 1 else axes
+
+
+def dp_size(mesh) -> int:
+    return math.prod(mesh.shape[a] for a in dp_axes(mesh))
+
+
+def _path_names(path) -> list:
+    return [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+
+
+# ---------------------------------------------------------------------------
+# parameters
+# ---------------------------------------------------------------------------
+
+def param_specs(params_avals, mesh, cfg: ModelConfig):
+    """PartitionSpec tree for a model's parameters.
+
+    Rules key off leaf names (the init functions in ``models/layers.py`` fix
+    the vocabulary: wq/wk/wv/wo, wi/wg, embed/unembed, router, ...) and leaf
+    rank (stacked-layer leaves carry a leading ``L`` dim; stacked MoE expert
+    weights are rank 4).  Anything unmatched is replicated — always correct,
+    never fast, which is the right default for norms and small vectors.
+    """
+    m = model_axis(mesh)
+    msize = model_size(mesh)
+    if m is None:
+        return jax.tree.map(lambda _: P(), params_avals)
+    naive = cfg.tp_rule == "naive"
+    heads_ok = naive or (cfg.num_heads and cfg.num_heads % msize == 0)
+    kv_ok = naive or (cfg.num_kv_heads and cfg.num_kv_heads % msize == 0)
+
+    def div(n: int) -> bool:
+        return naive or n % msize == 0
+
+    def rule(path, x):
+        names = _path_names(path)
+        leaf = names[-1]
+        nd = x.ndim
+        # --- top-level embeddings: vocab-parallel ---
+        if leaf in ("embed", "unembed") and nd == 2:
+            return P(m, None) if div(x.shape[0]) else P()
+        if leaf == "patch_proj" and nd == 2:
+            return P(None, m) if div(x.shape[1]) else P()
+        # --- attention projections (stacked: (L, d_in, d_out)) ---
+        if "attn" in names or "cross" in names:
+            if leaf == "wq" and nd == 3:
+                return P(None, None, m) if heads_ok else P()
+            if leaf in ("wk", "wv") and nd == 3:
+                return P(None, None, m) if kv_ok else P()
+            if leaf == "wo" and nd == 3:
+                return P(None, m, None) if heads_ok else P()
+            return P()  # q_norm / k_norm scales
+        # --- MoE: expert-parallel stacks (L, E, d_in, d_out) ---
+        if "moe" in names:
+            if nd == 4 and leaf in ("wi", "wg", "wo"):
+                return P(None, m, None, None) if div(x.shape[1]) else P()
+            if nd == 3 and leaf in ("wi", "wg"):   # shared-expert MLP
+                return P(None, None, m) if div(x.shape[2]) else P()
+            if nd == 3 and leaf == "wo":
+                return P(None, m, None) if div(x.shape[1]) else P()
+            return P()  # router, shared_gate
+        # --- dense MLP (stacked: (L, d_in, d_out)) ---
+        if leaf in ("wi", "wg") and nd == 3:
+            return P(None, None, m) if div(x.shape[2]) else P()
+        if leaf == "wo" and nd == 3:
+            return P(None, m, None) if div(x.shape[1]) else P()
+        # norms, biases, ssm/rwkv mixing vectors, everything small
+        return P()
+
+    return jax.tree_util.tree_map_with_path(rule, params_avals)
+
+
+# ---------------------------------------------------------------------------
+# batches / activations / caches
+# ---------------------------------------------------------------------------
+
+def _nones(k: int):
+    return (None,) * max(k, 0)
+
+
+def train_batch_specs(batch_avals, mesh):
+    """Microbatched train batch ``(n_mb, mb, ...)``: the scan axis stays
+    replicated, the per-microbatch batch dim shards over the data axes."""
+    d = data_axis(mesh)
+    return jax.tree.map(lambda x: P(None, d, *_nones(x.ndim - 2)),
+                        batch_avals)
+
+
+def prefill_batch_specs(batch_avals, mesh):
+    """Serving batch ``(B, ...)``: batch dim over the data axes."""
+    d = data_axis(mesh)
+    return jax.tree.map(lambda x: P(d, *_nones(x.ndim - 1)), batch_avals)
+
+
+def cache_specs(cache_avals, mesh, cfg: ModelConfig):
+    """Decode-cache tree: leaves are layer-stacked ``(L, B, ...)``.
+
+    KV leaves ``(L, B, S, KV, hd)`` additionally shard the KV-head dim on
+    ``model`` when the head count is aligned (same rule as the projections
+    that produce them — a cache must never be sharded differently from its
+    writer, or every decode step pays a reshard).
+    """
+    m = model_axis(mesh)
+    msize = model_size(mesh)
+    d = data_axis(mesh)
+    # same alignment rule (incl. the naive ablation) as param_specs' wk/wv:
+    # the cache must shard exactly like the projection that writes it
+    kv_ok = (m is not None and cfg.num_kv_heads
+             and (cfg.tp_rule == "naive"
+                  or cfg.num_kv_heads % msize == 0))
+
+    def rule(path, x):
+        leaf = _path_names(path)[-1]
+        if leaf in ("k", "v") and x.ndim == 5 and kv_ok:
+            return P(None, d, None, m, None)
+        return P(None, d, *_nones(x.ndim - 2))
+
+    return jax.tree_util.tree_map_with_path(rule, cache_avals)
+
+
+def logits_spec(mesh):
+    """(B, vocab) logits: batch over data axes, vocab gathered."""
+    return P(data_axis(mesh), None)
+
+
+def flat_grad_specs(params_avals, mesh):
+    """Flat fp32 gradient layout ``(n_devices, cols)`` sharded over ALL axes
+    — constraining a microbatch gradient to this spec is the reduce-scatter
+    half of the ZeRO-1 schedule (``adamw`` docstring has the data flow)."""
+    spec = P(flat_axes(mesh), None)
+    return jax.tree.map(lambda _: spec, params_avals)
+
+
+# ---------------------------------------------------------------------------
+# spec tree -> shardings
+# ---------------------------------------------------------------------------
+
+def _is_spec(x) -> bool:
+    return isinstance(x, P)
+
+
+def spec_to_sharding(spec_tree, mesh):
+    """PartitionSpec tree -> NamedSharding tree on ``mesh``."""
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=_is_spec)
+
+
+def constrain(tree, mesh, spec_tree):
+    """``with_sharding_constraint`` a whole pytree against a spec tree.
+
+    Uses explicit ``NamedSharding`` so it works without an ambient mesh
+    context (the launch drivers never install one)."""
+    return jax.tree.map(
+        lambda x, s: jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, s)),
+        tree, spec_tree)
+
+
+# ---------------------------------------------------------------------------
+# LOOPS row-shard specs (paper §3.5 coarse level x mesh sharding)
+# ---------------------------------------------------------------------------
+
+def loops_axis_spec(axis):
+    """Normalise a SpMM worker axis (name or tuple of names) to a P entry."""
+    if isinstance(axis, str):
+        return axis
+    axes = tuple(axis)
+    return axes[0] if len(axes) == 1 else axes
+
+
+def loops_in_specs(axis):
+    """``shard_map`` in_specs for ``distributed_spmm``'s operands, in the
+    :class:`~repro.core.distributed.ShardedLoops` field order
+
+        (row_ids, col_idx, vals, tile_rows, tile_cols, tile_vals, B)
+
+    — the six device-stacked workload arrays row-shard on the worker axis
+    (one CSR chunk or BCSR chunk per device; off-group devices hold a single
+    zero entry), the dense ``B`` is replicated (the paper's broadcast)."""
+    a = loops_axis_spec(axis)
+    return (P(a),) * 6 + (P(),)
+
+
+def loops_out_spec(axis):
+    """Per-device output rows stay row-sharded; assembly (when requested) is
+    a concatenation of exclusively-owned row slices — paper §3.4's
+    conflict-free row ownership, scaled out."""
+    return P(loops_axis_spec(axis))
+
+
+def loops_shardings(mesh, axis):
+    """NamedShardings to ``device_put`` a ShardedLoops' stacked arrays before
+    repeated SpMM calls (avoids re-transferring the workload every call)."""
+    return tuple(NamedSharding(mesh, s) for s in loops_in_specs(axis)[:-1])

@@ -1,0 +1,187 @@
+"""Jitted, sharded, donating step functions for train / prefill / decode.
+
+This is the device-level layer between the model API (pure functions over
+pytrees) and the launch drivers: every entry point closes over a mesh, bakes
+the :mod:`repro.dist.sharding` spec trees into ``jax.jit`` in/out shardings,
+and donates the state it updates (params + optimizer for training, the KV
+cache for decode), so a step is allocation-neutral.
+
+Train-step data flow (one jitted call)::
+
+    batch (n_mb, mb, ...)  -- data-sharded
+      scan over microbatches:
+        value_and_grad(train_loss)          # remat'd layer stack
+        grads -> flat fp32 (n_dev, cols)    # adamw.to_flat
+              -> constrain to P(all_axes)   # ZeRO reduce-scatter point
+        accumulate in the flat layout       # |params|*4/n_dev bytes
+      adamw.apply_updates                   # elementwise on local shards
+        -> unflatten + constrain to param specs   # ZeRO all-gather point
+
+Gradient accumulation therefore never materialises a replicated fp32
+gradient: each microbatch's reduce-scatter overlaps the next microbatch's
+compute under the XLA latency-hiding scheduler (see ``optim/adamw.py``).
+
+All functions accept abstract avals (``jax.ShapeDtypeStruct`` trees) for
+params/batches/caches, so the dry-run can ``.lower().compile()`` every
+(arch x shape x mesh) cell without allocating anything.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..launch.mesh import dp_axes
+from ..models import api
+from ..optim import adamw
+from ..optim.adamw import OptConfig
+from . import sharding as shr
+
+__all__ = ["StepBundle", "default_microbatches", "build_train_step",
+           "build_prefill", "build_serve_step"]
+
+F32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class StepBundle:
+    """A compiled-on-first-call train step plus the spec trees a driver needs
+    to place (or restore) the state it feeds in.
+
+    ``fn(params, opt_state, batch) -> (params, opt_state, metrics)`` with
+    ``params``/``opt_state`` donated; ``metrics`` carries scalar ``loss``,
+    ``grad_norm``, ``lr`` and ``tokens``.
+    """
+
+    fn: Any                    # jitted step
+    param_spec: Any            # PartitionSpec tree for params
+    opt_spec: Any              # PartitionSpec tree for optimizer state
+    batch_spec: Any            # PartitionSpec tree for the global batch
+    n_microbatches: int
+
+
+def default_microbatches(shape: ShapeConfig, mesh: Mesh,
+                         per_device_batch: int = 4) -> int:
+    """Pick a microbatch count for a train cell.
+
+    Targets ``per_device_batch`` sequences per data-parallel worker per
+    microbatch, then walks down until the count divides the global batch AND
+    the resulting microbatch divides evenly over the data axes (shard_map-
+    clean even though the jit path tolerates padding).
+    """
+    dp = shr.dp_size(mesh)
+    n_mb = max(shape.global_batch // max(dp * per_device_batch, 1), 1)
+    while n_mb > 1 and (shape.global_batch % n_mb
+                        or (shape.global_batch // n_mb) % dp):
+        n_mb -= 1
+    return n_mb
+
+
+def _flat_zeros(params_avals, n_shards: int):
+    """Zero accumulator in the flat fp32 layout (matches ``adamw.to_flat``)."""
+    return jax.tree.map(
+        lambda x: jnp.zeros((n_shards, math.ceil(x.size / n_shards)), F32),
+        params_avals)
+
+
+def build_train_step(cfg: ModelConfig, mesh: Mesh, params_avals, batch_avals,
+                     opt: OptConfig, *, n_microbatches: int = 1,
+                     loss_fn: Callable | None = None) -> StepBundle:
+    """Build the jitted grad-accumulating ZeRO-1 train step for ``cfg``.
+
+    ``loss_fn(params, microbatch) -> (loss, aux)`` defaults to the family-
+    dispatched ``models.api.train_loss``.
+    """
+    loss_fn = loss_fn or (lambda p, mb: api.train_loss(cfg, p, mb))
+    p_spec = shr.param_specs(params_avals, mesh, cfg)
+    o_spec = shr.opt_specs(params_avals, mesh)
+    b_spec = shr.train_batch_specs(batch_avals, mesh)
+    g_spec = shr.flat_grad_specs(params_avals, mesh)
+    n_shards = math.prod(mesh.shape.values())
+    n_mb = n_microbatches
+
+    def step(params, opt_state, batch):
+        def microbatch(carry, mb):
+            g_acc, loss_sum, tok_sum = carry
+            (loss, aux), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, mb)
+            # flat fp32 + all-axes constraint == the reduce-scatter point
+            gflat = jax.tree.map(lambda g: adamw.to_flat(g, n_shards), grads)
+            gflat = shr.constrain(gflat, mesh, g_spec)
+            g_acc = jax.tree.map(jnp.add, g_acc, gflat)
+            return (g_acc, loss_sum + loss,
+                    tok_sum + aux.get("tokens", 0.0)), None
+
+        init = (_flat_zeros(params, n_shards), jnp.zeros((), F32),
+                jnp.zeros((), F32))
+        (g_acc, loss_sum, tok_sum), _ = jax.lax.scan(microbatch, init, batch)
+        g_mean = jax.tree.map(lambda g: g / n_mb, g_acc)
+        new_params, new_opt, gnorm = adamw.apply_updates(
+            params, opt_state, g_mean, opt, p_spec, mesh)
+        metrics = {"loss": loss_sum / n_mb, "grad_norm": gnorm,
+                   "lr": adamw.lr_at(opt, new_opt["count"]),
+                   "tokens": tok_sum}
+        return new_params, new_opt, metrics
+
+    psh = shr.spec_to_sharding(p_spec, mesh)
+    osh = shr.spec_to_sharding(o_spec, mesh)
+    bsh = shr.spec_to_sharding(b_spec, mesh)
+    rep = NamedSharding(mesh, P())
+    fn = jax.jit(step, in_shardings=(psh, osh, bsh),
+                 out_shardings=(psh, osh, rep), donate_argnums=(0, 1))
+    return StepBundle(fn=fn, param_spec=p_spec, opt_spec=o_spec,
+                      batch_spec=b_spec, n_microbatches=n_mb)
+
+
+def build_prefill(cfg: ModelConfig, mesh: Mesh, params_avals, batch_avals):
+    """Jitted prefill: ``fn(params, batch) -> (cache, last_logits)``.
+
+    Returns ``(fn, param_spec, cache_spec)``; the cache comes out already
+    sharded per :func:`repro.dist.sharding.cache_specs`, so the decode step
+    built against it never reshards.
+    """
+    p_spec = shr.param_specs(params_avals, mesh, cfg)
+    b_spec = shr.prefill_batch_specs(batch_avals, mesh)
+
+    def prefill(params, batch):
+        return api.prefill(cfg, params, batch)
+
+    cache_avals, _ = jax.eval_shape(prefill, params_avals, batch_avals)
+    c_spec = shr.cache_specs(cache_avals, mesh, cfg)
+    fn = jax.jit(
+        prefill,
+        in_shardings=(shr.spec_to_sharding(p_spec, mesh),
+                      shr.spec_to_sharding(b_spec, mesh)),
+        out_shardings=(shr.spec_to_sharding(c_spec, mesh),
+                       NamedSharding(mesh, shr.logits_spec(mesh))))
+    return fn, p_spec, c_spec
+
+
+def build_serve_step(cfg: ModelConfig, mesh: Mesh, params_avals, cache_avals):
+    """Jitted single-token decode:
+    ``fn(params, cache, tokens, length) -> (cache, logits)`` with the cache
+    donated (decode is a pure cache update — the old buffers are dead).
+
+    Returns ``(fn, param_spec, cache_spec)``.
+    """
+    p_spec = shr.param_specs(params_avals, mesh, cfg)
+    c_spec = shr.cache_specs(cache_avals, mesh, cfg)
+    rep = NamedSharding(mesh, P())
+    tok_sh = NamedSharding(mesh, P(shr.data_axis(mesh), None))
+
+    def decode(params, cache, tokens, length):
+        return api.decode_step(cfg, params, cache, tokens, length)
+
+    fn = jax.jit(
+        decode,
+        in_shardings=(shr.spec_to_sharding(p_spec, mesh),
+                      shr.spec_to_sharding(c_spec, mesh), tok_sh, rep),
+        out_shardings=(shr.spec_to_sharding(c_spec, mesh),
+                       NamedSharding(mesh, shr.logits_spec(mesh))),
+        donate_argnums=(1,))
+    return fn, p_spec, c_spec

@@ -1,1 +1,3 @@
-"""Launchers: mesh construction, dry-run, train and serve drivers."""
+"""Launchers: mesh construction (the axis vocabulary every PartitionSpec in
+``repro.dist.sharding`` is written against), abstract input specs for the
+dry-run, and the train / serve / dryrun CLI drivers."""

@@ -7,6 +7,11 @@ The two lines above MUST stay first: jax locks the device count at first
 initialisation, and the production meshes need 512 placeholder host devices
 (single-pod cells use the first 256).
 
+The step functions come from ``repro.dist.step`` (built against abstract
+avals — nothing is allocated) with in/out shardings baked from
+``repro.dist.sharding``; a successful compile is therefore a proof that the
+sharding config is coherent at production scale (docs/architecture.md §4).
+
 For each cell this script:
   1. builds allocation-free avals (params / optimizer / batch / cache),
   2. lowers the pjit'd step with explicit in/out shardings,
@@ -101,6 +106,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
             rec["memory_analysis"] = {"error": str(e)}
         try:
             ca = compiled.cost_analysis()
+            if isinstance(ca, (list, tuple)):  # jax <= 0.4.x: per-device list
+                ca = ca[0]
             rec["cost_analysis"] = {k: float(v) for k, v in ca.items()
                                     if isinstance(v, (int, float))
                                     and ("flops" in k or "bytes" in k

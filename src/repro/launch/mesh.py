@@ -9,36 +9,39 @@ Axis semantics:
   pod   — data-parallel replica groups across pods (2 pods = 512 chips)
   data  — in-pod data parallelism (batch + ZeRO-1 optimizer shards)
   model — tensor/expert parallelism (Megatron col/row splits, EP, KV shards)
+
+``repro.dist.sharding`` builds every PartitionSpec in the system against
+these axis names; this module is the single source of truth for them.
 """
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+from ..compat import make_mesh
 
 __all__ = ["make_production_mesh", "make_test_mesh", "dp_axes", "flat_axes"]
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     import math
+
+    import jax
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     ndev = math.prod(shape)
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes),
-                         devices=jax.devices()[:ndev])
+    return make_mesh(shape, axes, devices=jax.devices()[:ndev])
 
 
 def make_test_mesh(data: int = 2, model: int = 2) -> Mesh:
     """Small CPU mesh for integration tests (requires the host-device flag)."""
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    return make_mesh((data, model), ("data", "model"))
 
 
-def dp_axes(mesh: Mesh):
+def dp_axes(mesh) -> tuple:
     """The data-parallel axis name(s): ('pod', 'data') on multi-pod meshes."""
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
 
 
-def flat_axes(mesh: Mesh):
+def flat_axes(mesh) -> tuple:
     """All axes, for fully-flat (ZeRO) sharding."""
     return tuple(mesh.axis_names)

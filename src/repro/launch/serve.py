@@ -1,5 +1,11 @@
 """Batched serving driver: prefill a prompt batch, then decode N tokens.
 
+Uses the two compiled halves from ``repro.dist.step``:
+``build_prefill`` (batch -> sharded KV cache + last logits) and
+``build_serve_step`` (one cache-donating decode step).  Between them the
+cache's sequence axis is grown once to prompt+gen length — decode then runs
+allocation-free.
+
 Demonstrates the serving path end-to-end on CPU with a reduced config:
 
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --reduced \

@@ -1,5 +1,10 @@
 """End-to-end training driver.
 
+Thin CLI over the device layer: ``repro.dist.step.build_train_step`` builds
+the jitted grad-accumulating ZeRO-1 step, ``repro.dist.sharding`` places
+params/optimizer/batches on the mesh (docs/architecture.md §4 for the spec
+conventions).  This driver only owns the loop: data, checkpoints, logging.
+
 Fault tolerance contract:
   * checkpoints are step-atomic and async (``repro.checkpoint``); the data
     "iterator" is the step counter itself (deterministic pipeline), so

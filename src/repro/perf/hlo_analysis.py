@@ -226,7 +226,27 @@ def _operand_names(rest: str) -> List[str]:
                 break
         buf.append(ch)
     inner = "".join(buf)
-    return [t.strip().lstrip("%") for t in inner.split(",") if t.strip()]
+    # split at top-level commas only: shape dims ([4,8,16]) and layouts
+    # ({2,1,0}) carry commas of their own on XLA versions that print typed
+    # operands ("f32[4,8]{1,0} %name" instead of just "%name")
+    parts: List[str] = []
+    d = 0
+    cur: List[str] = []
+    for ch in inner:
+        if ch in "([{":
+            d += 1
+        elif ch in ")]}":
+            d -= 1
+        if ch == "," and d == 0:
+            parts.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        parts.append("".join(cur))
+    # the operand name is the (possibly only) trailing %token
+    return [t.strip().split()[-1].lstrip("%")
+            for t in parts if t.strip()]
 
 
 def _group_size(rest: str) -> int:

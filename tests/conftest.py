@@ -1,13 +1,30 @@
+"""Shared fixtures.  Degrades gracefully when ``hypothesis`` is missing
+(minimal environments install only ``jax``/``numpy``/``pytest``): the
+property-based test modules are skipped at collection instead of killing the
+whole run with an ImportError.  ``pip install -e .[test]`` restores them.
+"""
+import importlib.util
+
 import numpy as np
 import pytest
-from hypothesis import HealthCheck, settings
 
-# Deterministic, CI-friendly hypothesis profile (interpret-mode kernels are
-# slow per-example; keep example counts modest).
-settings.register_profile(
-    "repro", max_examples=25, deadline=None,
-    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large])
-settings.load_profile("repro")
+HAVE_HYPOTHESIS = importlib.util.find_spec("hypothesis") is not None
+
+if HAVE_HYPOTHESIS:
+    from hypothesis import HealthCheck, settings
+
+    # Deterministic, CI-friendly hypothesis profile (interpret-mode kernels
+    # are slow per-example; keep example counts modest).
+    settings.register_profile(
+        "repro", max_examples=25, deadline=None,
+        suppress_health_check=[HealthCheck.too_slow,
+                               HealthCheck.data_too_large])
+    settings.load_profile("repro")
+else:
+    # These modules import hypothesis at module scope; without it they can't
+    # even be collected, so skip the files (not just the tests).
+    collect_ignore = ["test_formats.py", "test_perf_model.py",
+                      "test_spmm.py"]
 
 
 @pytest.fixture

@@ -25,6 +25,7 @@ def test_distributed_spmm_device_groups():
     several (g_vpu, g_mxu) splits including the §4.3 ablation extremes."""
     out = _run("""
         import numpy as np, jax, jax.numpy as jnp
+        from repro.compat import make_mesh
         from repro.core import csr_from_dense, plan_and_convert, loops_from_csr
         from repro.core import shard_loops, distributed_spmm
         rng = np.random.default_rng(0)
@@ -32,8 +33,7 @@ def test_distributed_spmm_device_groups():
              * rng.standard_normal((210, 64))).astype(np.float32)
         B = rng.standard_normal((64, 16)).astype(np.float32)
         csr = csr_from_dense(A)
-        mesh = jax.make_mesh((8,), ("model",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((8,), ("model",))
         for g_vpu, r_frac in [(2, 0.25), (4, 0.5), (7, 0.9)]:
             r_b = int(210 * r_frac) // 8 * 8
             fmt = loops_from_csr(csr, r_b, 8)
@@ -50,13 +50,13 @@ def test_compressed_psum_close_to_exact():
     out = _run("""
         import numpy as np, jax, jax.numpy as jnp
         from functools import partial
+        from repro.compat import make_mesh, shard_map
         from repro.dist.compress import compressed_psum
-        mesh = jax.make_mesh((8,), ("d",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((8,), ("d",))
         x = jnp.asarray(np.random.default_rng(0)
                         .standard_normal((8, 8192)).astype(np.float32))
         from jax.sharding import PartitionSpec as P
-        @partial(jax.shard_map, mesh=mesh, in_specs=P("d"), out_specs=P("d"))
+        @partial(shard_map, mesh=mesh, in_specs=P("d"), out_specs=P("d"))
         def f(xs):
             return compressed_psum(xs[0], "d")[None]
         got = np.asarray(f(x))[0]

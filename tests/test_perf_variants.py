@@ -81,12 +81,13 @@ def test_moe_gather_grads_match_scatter():
 
 
 def test_kv_aligned_rule_replicates_misaligned_heads():
+    from repro.compat import abstract_mesh
     from repro.configs import REDUCED
     from repro.dist.sharding import param_specs
     from repro.launch import specs as specs_lib
-    from jax.sharding import AbstractMesh, PartitionSpec as P
+    from jax.sharding import PartitionSpec as P
     # spec rules only read mesh.shape -> an AbstractMesh needs no devices
-    mesh = AbstractMesh((1, 2), ("data", "model"))
+    mesh = abstract_mesh((1, 2), ("data", "model"))
     cfg = REDUCED["hymba-1.5b"]()          # 4 heads, kv=2: aligned on 2-way
     pav = specs_lib.abstract_params(cfg)
     sp = param_specs(pav, mesh, cfg)
