@@ -9,6 +9,7 @@ benchmarks/results/bench.csv).
   table3 — modeled energy efficiency (Table 3)
   table4 — end-to-end GCN training (§4.5 / Table 4)
   roofline — §Roofline terms for every dry-run cell (assignment)
+  autotune — model-only vs measured/cached plans + cache hit rates
 """
 from __future__ import annotations
 
@@ -21,11 +22,12 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list: fig4,fig5,sec43,table3,table4,roofline")
+                    help="comma list: fig4,fig5,sec43,table3,table4,"
+                         "roofline,autotune")
     args = ap.parse_args()
 
-    from . import (fig4_throughput, fig5_halfprec, roofline, sec43_scheduling,
-                   table3_energy, table4_gnn)
+    from . import (autotune_suite, fig4_throughput, fig5_halfprec, roofline,
+                   sec43_scheduling, table3_energy, table4_gnn)
     suites = {
         "fig4": fig4_throughput.main,
         "fig5": fig5_halfprec.main,
@@ -33,6 +35,7 @@ def main() -> None:
         "table3": table3_energy.main,
         "table4": table4_gnn.main,
         "roofline": roofline.main,
+        "autotune": autotune_suite.main,
     }
     chosen = (args.only.split(",") if args.only else list(suites))
 

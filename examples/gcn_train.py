@@ -25,11 +25,27 @@ def main():
     ap.add_argument("--nodes", type=int, default=2048)
     ap.add_argument("--degree", type=int, default=8)
     ap.add_argument("--lr", type=float, default=5.0)
+    ap.add_argument("--autotune", action="store_true",
+                    help="plan via the measured repro.tune cache instead of "
+                         "the hand-set total_workers=8 model path; the two "
+                         "GCN layers (and every restart of this script with "
+                         "the same graph statistics) share one cached plan")
     args = ap.parse_args()
 
     t0 = time.time()
     adj = suite.gcn_graph(args.nodes, args.degree, seed=0)
-    fmt, plan = plan_and_convert(adj, total_workers=8)
+    if args.autotune:
+        from repro.tune import PlanCache, autotune
+        cache = PlanCache()   # $REPRO_TUNE_CACHE honoured
+        # One autotune per layer: layer 0 pays for the search (or hits a
+        # previous run's plan on disk), layer 1 is an in-process cache hit.
+        fmt, plan = autotune(adj, n_cols=F_HID, cache=cache, backend="jnp")
+        _, plan1 = autotune(adj, n_cols=F_HID, cache=cache, backend="jnp")
+        assert plan1 == plan, "same fingerprint must yield the same plan"
+        print(f"autotune: plan={plan}; cache {cache.stats} "
+              f"({len(cache)} stored plans in {cache.dir})")
+    else:
+        fmt, plan = plan_and_convert(adj, total_workers=8)
     t_prep = time.time() - t0
     print(f"graph: {args.nodes} nodes, nnz={adj.nnz}; conversion {t_prep:.3f}s "
           f"(r_boundary={plan.r_boundary})")

@@ -141,8 +141,8 @@ def shard_loops(fmt: LoopsFormat, num_devices: int, g_vpu: int) -> ShardedLoops:
 
 def shard_loops_auto(fmt: LoopsFormat, num_devices: int, *,
                      model: QuadraticPerfModel | None = None,
-                     measure: Callable[[int, int], float] | None = None
-                     ) -> ShardedLoops:
+                     measure: Callable[[int, int], float] | None = None,
+                     cache=None) -> ShardedLoops:
     """Coarse-level scheduling (paper §3.5.3): let the quadratic perf model
     pick the (vector-group, matrix-group) *device* split, then shard.
 
@@ -154,6 +154,11 @@ def shard_loops_auto(fmt: LoopsFormat, num_devices: int, *,
     clock at small scale, roofline terms from the dry-run at production
     scale).  With neither, the split falls back to proportional nnz weight —
     the same default as ``plan_and_convert``'s thread-level path.
+
+    ``cache`` — a :class:`repro.tune.PlanCache` — is consulted *before*
+    solving Eq. 3: if a structurally matching device split was recorded for
+    this ``num_devices``, it is reused (calibration and the argmax are both
+    skipped); otherwise the solved split is stored for the next caller.
     """
     has_csr = fmt.r_boundary > 0
     has_bcsr = fmt.r_boundary < fmt.nrows
@@ -163,6 +168,22 @@ def shard_loops_auto(fmt: LoopsFormat, num_devices: int, *,
         raise ValueError("shard_loops_auto needs >= 2 devices when both the "
                          "CSR and BCSR regions are non-empty; use "
                          "loops_spmm for single-device execution")
+    key = fp = None
+    if cache is not None:
+        from ..tune.fingerprint import cache_key, loops_fingerprint
+        fp = loops_fingerprint(fmt)
+        dt = np.dtype(fmt.csr_part.vals.dtype)
+        key = cache_key(fp, n_cols=0, dtype=dt,
+                        backend=f"dist{num_devices}")
+        rec = cache.lookup(key, features=fp.features(), dtype=dt.name,
+                           n_cols=0, backend=f"dist{num_devices}",
+                           max_distance=0.25)
+        if rec is not None:
+            g_vpu = int(rec["plan"]["t_vpu"])
+            g_vpu = int(np.clip(g_vpu, 1 if has_csr else 0,
+                                num_devices - 1 if has_bcsr
+                                else num_devices))
+            return shard_loops(fmt, num_devices, g_vpu)
     if model is None and measure is not None:
         from .perf_model import calibrate
         model = calibrate(measure, num_devices)
@@ -180,6 +201,14 @@ def shard_loops_auto(fmt: LoopsFormat, num_devices: int, *,
     if has_bcsr:
         g_vpu = min(g_vpu, num_devices - 1)
     g_vpu = int(np.clip(g_vpu, 0, num_devices))
+    if cache is not None and key is not None:
+        from ..tune.api import make_record
+        cache.put(key, make_record(
+            fp.features(), dtype=fmt.csr_part.vals.dtype, n_cols=0,
+            backend=f"dist{num_devices}",
+            r_frac=fmt.r_boundary / max(fmt.nrows, 1),
+            t_vpu=g_vpu, t_mxu=num_devices - g_vpu,
+            br=fmt.bcsr_part.br))
     return shard_loops(fmt, num_devices, g_vpu)
 
 

@@ -189,15 +189,24 @@ def csr_from_dense(dense: np.ndarray) -> CSR:
 
 
 def csr_from_coo(rows, cols, vals, shape) -> CSR:
+    """COO -> CSR, coalescing duplicates: values sharing a ``(row, col)``
+    coordinate are *summed* (random generators like ``suite.uniform`` emit
+    colliding coordinates; un-coalesced duplicates inflate nnz and every
+    statistic derived from it)."""
     rows = np.asarray(rows, np.int64)
     cols = np.asarray(cols, np.int64)
     vals = np.asarray(vals)
-    order = np.lexsort((cols, rows))
-    rows, cols, vals = rows[order], cols[order], vals[order]
+    # np.unique on the linearised coordinate both dedups and (row, col)-sorts.
+    lin = rows * int(shape[1]) + cols
+    uniq, inv = np.unique(lin, return_inverse=True)
+    summed = np.zeros(len(uniq), vals.dtype)
+    np.add.at(summed, inv, vals)
+    rows = uniq // int(shape[1])
+    cols = uniq % int(shape[1])
     counts = np.bincount(rows, minlength=shape[0])
     row_ptr = np.zeros(shape[0] + 1, np.int32)
     np.cumsum(counts, out=row_ptr[1:])
-    return _csr_from_arrays(row_ptr, cols, vals, shape)
+    return _csr_from_arrays(row_ptr, cols, summed, shape)
 
 
 def csr_to_dense(csr: CSR) -> np.ndarray:

@@ -55,14 +55,29 @@ class QuadraticPerfModel:
 
 def fit_perf_model(samples: Sequence[Tuple[int, int]],
                    perfs: Sequence[float]) -> QuadraticPerfModel:
-    """Least-squares fit of Eq. 2 over measured (x, y) -> perf samples."""
+    """Least-squares fit of Eq. 2 over measured (x, y) -> perf samples.
+
+    Rank-deficient candidate sets (fewer than 5 *distinct* (x, y) points —
+    e.g. a caller probing only the axes' endpoints) underdetermine the 5
+    coefficients; plain ``lstsq`` then returns one of infinitely many exact
+    fits whose extrapolation ``best_allocation`` would trust blindly.  We
+    fall back to a ridge (Tikhonov) solution: minimal-norm coefficients that
+    still interpolate the measurements, with the quadratic terms shrunk so
+    the argmax cannot run away on unmeasured configurations.
+    """
     xy = np.asarray(samples, np.float64)
     if xy.ndim != 2 or xy.shape[1] != 2 or xy.shape[0] < 5:
         raise ValueError("need >= 5 (x, y) samples to fit 5 coefficients")
     x, y = xy[:, 0], xy[:, 1]
     design = np.stack([np.ones_like(x), x, y, x * x, y * y], axis=1)
-    coef, *_ = np.linalg.lstsq(design, np.asarray(perfs, np.float64),
-                               rcond=None)
+    p = np.asarray(perfs, np.float64)
+    if np.linalg.matrix_rank(design) < design.shape[1]:
+        ata = design.T @ design
+        lam = 1e-6 * max(float(np.trace(ata)) / design.shape[1], 1.0)
+        coef = np.linalg.solve(ata + lam * np.eye(design.shape[1]),
+                               design.T @ p)
+    else:
+        coef, *_ = np.linalg.lstsq(design, p, rcond=None)
     return QuadraticPerfModel(coef=coef)
 
 

@@ -53,14 +53,22 @@ def plan_and_convert(csr: CSR, *, total_workers: int = 8,
                      model: QuadraticPerfModel | None = None,
                      tp_vpu: float = 1.0, tp_mxu: float = 4.0,
                      br: int | None = None,
-                     paper_literal: bool = False) -> tuple[LoopsFormat, SpmmPlan]:
+                     paper_literal: bool = False,
+                     tuner=None) -> tuple[LoopsFormat, SpmmPlan]:
     """Pick (t_vpu, t_mxu) via the perf model, solve Eq. 1, run Algorithm 1.
 
     ``tp_vpu``/``tp_mxu`` are per-worker row throughputs; defaults reflect the
     v5e VPU:MXU FLOP ratio for regular rows.  When ``model`` is given, the
     allocation is the model argmax (Eq. 3); otherwise it is proportional to
     the throughputs.
+
+    ``tuner`` — a :class:`repro.tune.Tuner` (or anything with
+    ``.tune(csr) -> (fmt, plan)``) — replaces the model-only path entirely:
+    the plan comes from the measured, fingerprint-keyed cache, so repeated
+    call sites (FFN layers, GCN epochs, serving) never re-derive it.
     """
+    if tuner is not None:
+        return tuner.tune(csr)
     br = br or default_br(csr.vals.dtype)
     if model is not None:
         t_vpu, t_mxu = model.best_allocation(total_workers)

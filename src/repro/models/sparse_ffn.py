@@ -61,11 +61,18 @@ def magnitude_prune(w: np.ndarray, sparsity: float) -> np.ndarray:
 
 
 def sparse_linear_from_dense(w: np.ndarray, sparsity: float, *,
-                             total_workers: int = 8) -> SparseLinear:
-    """Prune a dense (d_out, d_in) weight and convert to LOOPS format."""
+                             total_workers: int = 8,
+                             tuner=None) -> SparseLinear:
+    """Prune a dense (d_out, d_in) weight and convert to LOOPS format.
+
+    ``tuner`` (a :class:`repro.tune.Tuner`) routes planning through the
+    measured plan cache: same-shaped layers of a deep model fingerprint
+    alike, so the first layer pays for the search and every later layer is
+    a cache hit — conversion only, no measurement.
+    """
     pruned = magnitude_prune(np.asarray(w), sparsity)
     csr = csr_from_dense(pruned)
-    fmt, _ = plan_and_convert(csr, total_workers=total_workers)
+    fmt, _ = plan_and_convert(csr, total_workers=total_workers, tuner=tuner)
     return SparseLinear(fmt=fmt, d_in=w.shape[1], d_out=w.shape[0])
 
 

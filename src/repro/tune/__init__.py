@@ -1,0 +1,26 @@
+"""repro.tune — measured autotuner with a persistent plan cache.
+
+The paper schedules with a *model* (Eq. 2/3); production SpMM services (and
+the SME kernel-generation line of related work) *measure* and *reuse*.  This
+subsystem closes that gap: structural fingerprints key a versioned on-disk
+plan cache, a budgeted search (model-pruned, wall-clock-ranked) fills it,
+and every call site in the stack (`plan_and_convert(tuner=...)`,
+`sparse_linear_from_dense(tuner=...)`, `shard_loops_auto(cache=...)`) can
+amortise one measurement sweep across millions of requests.
+"""
+from .api import (Tuner, autotune, default_cache, make_record,
+                  plan_from_record, record_from_result, tune_suite)
+from .cache import CACHE_VERSION, CacheStats, PlanCache
+from .fingerprint import (Fingerprint, cache_key, feature_distance,
+                          fingerprint, loops_fingerprint)
+from .search import (SearchBudget, SearchResult, enumerate_plans,
+                     measure_plan_gflops, prior_model, search)
+
+__all__ = [
+    "Tuner", "autotune", "default_cache", "tune_suite", "make_record",
+    "plan_from_record", "record_from_result", "CACHE_VERSION", "CacheStats",
+    "PlanCache",
+    "Fingerprint", "cache_key", "feature_distance", "fingerprint",
+    "loops_fingerprint", "SearchBudget", "SearchResult", "enumerate_plans",
+    "measure_plan_gflops", "prior_model", "search",
+]

@@ -1,0 +1,176 @@
+"""Front door of the tuner: ``autotune`` and ``tune_suite``.
+
+Data flow (docs/architecture.md §5):
+
+    CSR ──fingerprint──▶ cache lookup (exact key, then near-match)
+          │ hit: rehydrate the plan (r_boundary stored as a row *fraction*
+          │      so a near-match transfers across sizes), run Algorithm 1,
+          │      skip all measurement
+          ▼ miss
+        search (model-pruned, wall-clock-ranked) ──▶ cache.put ──▶ execute
+
+A repeated ``autotune`` on the same matrix is an exact hit that performs
+zero measurements; a structurally similar unseen matrix is a near-hit that
+reuses the neighbour's plan.  Both are counted in ``cache.stats``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Mapping, Optional, Tuple
+
+import numpy as np
+
+from ..core.formats import CSR, LoopsFormat, loops_from_csr
+from ..core.perf_model import QuadraticPerfModel
+from ..core.spmm import SpmmPlan
+from .cache import CACHE_VERSION, PlanCache
+from .fingerprint import Fingerprint, cache_key, fingerprint
+from .search import SearchBudget, SearchResult, search
+
+__all__ = ["autotune", "tune_suite", "Tuner", "default_cache",
+           "make_record", "plan_from_record", "record_from_result"]
+
+_DEFAULT_CACHE: Optional[PlanCache] = None
+
+
+def default_cache() -> PlanCache:
+    """Process-wide cache instance (``$REPRO_TUNE_CACHE`` honoured)."""
+    global _DEFAULT_CACHE
+    if _DEFAULT_CACHE is None:
+        _DEFAULT_CACHE = PlanCache()
+    return _DEFAULT_CACHE
+
+
+def make_record(features, *, dtype, n_cols: int, backend: str, r_frac: float,
+                t_vpu: int, t_mxu: int, br: int, gflops: float = 0.0,
+                trials: int = 0) -> Dict:
+    """The one place the cache-record schema is spelled out (the distributed
+    scheduler and the search path both store through here).  ``r_frac`` (not
+    the absolute boundary) is stored so a plan transfers to same-bucket
+    matrices of slightly different height."""
+    return {
+        "version": CACHE_VERSION,
+        "fingerprint": [float(f) for f in features],
+        "dtype": str(np.dtype(dtype).name),
+        "n_cols": int(n_cols),
+        "backend": backend,
+        "plan": {"r_frac": float(r_frac), "t_vpu": int(t_vpu),
+                 "t_mxu": int(t_mxu), "br": int(br)},
+        "gflops": float(gflops),
+        "trials": int(trials),
+    }
+
+
+def record_from_result(fp: Fingerprint, res: SearchResult, *, nrows: int,
+                       dtype, n_cols: int, backend: str) -> Dict:
+    """Serialisable cache record for a completed search."""
+    return make_record(
+        fp.features(), dtype=dtype, n_cols=n_cols, backend=backend,
+        r_frac=float(res.plan.r_boundary) / max(nrows, 1),
+        t_vpu=res.plan.t_vpu, t_mxu=res.plan.t_mxu, br=res.plan.br,
+        gflops=res.gflops, trials=res.measured)
+
+
+def plan_from_record(rec: Mapping, nrows: int) -> SpmmPlan:
+    """Rehydrate a concrete plan for an ``nrows``-row matrix.
+
+    The endpoints are preserved exactly (a pure-CSR plan must stay
+    ``r_boundary == nrows`` even when ``nrows`` is not a ``br`` multiple),
+    and the boundary is forced consistent with the worker split: a plan
+    with no MXU workers cannot leave a BCSR region behind, nor vice versa.
+    """
+    p = rec["plan"]
+    br = int(p["br"])
+    t_vpu, t_mxu = int(p["t_vpu"]), int(p["t_mxu"])
+    r_frac = float(p["r_frac"])
+    r_b = int(round(r_frac * nrows))
+    if r_b < nrows:                    # interior boundaries snap to tiles
+        r_b = min(max(r_b // br * br, 0), nrows)
+    if t_mxu == 0:                     # no matrix workers -> pure CSR
+        r_b = nrows
+    elif t_vpu == 0:                   # no vector workers -> pure BCSR
+        r_b = 0
+    return SpmmPlan(r_boundary=r_b, t_vpu=t_vpu, t_mxu=t_mxu, br=br)
+
+
+def autotune(csr: CSR, *, n_cols: int = 32, backend: str = "jnp",
+             total_workers: int = 8, cache: Optional[PlanCache] = None,
+             model: Optional[QuadraticPerfModel] = None,
+             budget: SearchBudget = SearchBudget(),
+             near_distance: float = 0.25,
+             ) -> Tuple[LoopsFormat, SpmmPlan]:
+    """Tune-or-fetch an execution plan for ``csr`` against an (ncols, n_cols)
+    dense operand; returns the converted format plus the resolved plan.
+
+    On a cache hit (exact or near) only the Algorithm 1 conversion runs —
+    no candidate is ever measured.  On a miss, :func:`repro.tune.search.search`
+    spends its budget and the winner is persisted.
+    """
+    if cache is None:   # NB: not `cache or ...` — an empty PlanCache is falsy
+        cache = default_cache()
+    fp = fingerprint(csr)
+    dt = np.dtype(csr.vals.dtype)
+    key = cache_key(fp, n_cols=n_cols, dtype=dt, backend=backend)
+    rec = cache.lookup(key, features=fp.features(), dtype=dt.name,
+                       n_cols=n_cols, backend=backend,
+                       max_distance=near_distance)
+    if rec is not None:
+        plan = plan_from_record(rec, csr.nrows)
+        if cache.peek(key) is None:
+            # Near-hit: promote the borrowed plan under THIS matrix's exact
+            # key (with its own fingerprint), so the next lookup is exact
+            # and downstream peeks (tune_suite reporting) always resolve.
+            cache.put(key, {**rec,
+                            "fingerprint": [float(f) for f in fp.features()]})
+        return loops_from_csr(csr, plan.r_boundary, plan.br), plan
+    res = search(csr, n_cols=n_cols, total_workers=total_workers,
+                 model=model, budget=budget, backend=backend)
+    cache.put(key, record_from_result(fp, res, nrows=csr.nrows, dtype=dt,
+                                      n_cols=n_cols, backend=backend))
+    return res.fmt, res.plan
+
+
+def tune_suite(matrices: Mapping[str, CSR], *, n_cols: int = 32,
+               backend: str = "jnp", total_workers: int = 8,
+               cache: Optional[PlanCache] = None,
+               budget: SearchBudget = SearchBudget(),
+               ) -> Dict[str, Tuple[SpmmPlan, float]]:
+    """Batch-tune a named matrix set (e.g. ``suite.table2_like`` outputs).
+
+    Returns ``{name: (plan, cached_gflops)}``; structurally similar matrices
+    later in the iteration order ride the near-match path of earlier ones.
+    """
+    if cache is None:
+        cache = default_cache()
+    out: Dict[str, Tuple[SpmmPlan, float]] = {}
+    for name, csr in matrices.items():
+        _, plan = autotune(csr, n_cols=n_cols, backend=backend,
+                           total_workers=total_workers, cache=cache,
+                           budget=budget)
+        key = cache_key(fingerprint(csr), n_cols=n_cols,
+                        dtype=np.dtype(csr.vals.dtype), backend=backend)
+        rec = cache.peek(key)
+        gf = float(rec["gflops"]) if rec else float("nan")
+        out[name] = (plan, gf)
+    return out
+
+
+@dataclasses.dataclass
+class Tuner:
+    """Bound tuning context, pluggable into ``plan_and_convert(tuner=...)``
+    and ``sparse_linear_from_dense(tuner=...)`` so call sites that used a
+    hand-set ``total_workers=8`` instead share one measured plan cache."""
+
+    cache: PlanCache = dataclasses.field(default_factory=default_cache)
+    n_cols: int = 32
+    backend: str = "jnp"
+    total_workers: int = 8
+    budget: SearchBudget = dataclasses.field(default_factory=SearchBudget)
+    model: Optional[QuadraticPerfModel] = None
+    near_distance: float = 0.25
+
+    def tune(self, csr: CSR) -> Tuple[LoopsFormat, SpmmPlan]:
+        return autotune(csr, n_cols=self.n_cols, backend=self.backend,
+                        total_workers=self.total_workers, cache=self.cache,
+                        model=self.model, budget=self.budget,
+                        near_distance=self.near_distance)

@@ -1,0 +1,177 @@
+"""Persistent, versioned plan cache with an in-memory LRU front.
+
+Layout: one JSON file (``plans.json``) under the cache directory —
+``$REPRO_TUNE_CACHE`` if set, else ``~/.cache/repro-tune``.  The file carries
+a ``version`` stamp; a mismatch (older tuner, changed fingerprint layout)
+discards the stored entries rather than mis-applying them.  Writes are
+atomic (tmp + rename) so a crashed tuning run can never corrupt the cache.
+
+Lookup is two-tier:
+
+1. **exact** — the quantised-fingerprint key (``fingerprint.cache_key``);
+2. **near** — scan entries with the same execution context (dtype, n_cols,
+   backend) and accept the closest fingerprint within ``max_distance``
+   (RMS over the log/ratio feature vector).  This is what lets an unseen
+   matrix reuse the plan of a structurally similar one (same Table-2-style
+   statistics) without paying for a measurement sweep.
+
+``stats`` counts hits / near-hits / misses — the amortisation story a
+production SpMM service lives on (a repeated ``autotune`` call must be a
+pure cache hit; tests assert this).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import tempfile
+from collections import OrderedDict
+from typing import Any, Dict, Optional
+
+from .fingerprint import feature_distance
+
+__all__ = ["PlanCache", "CacheStats", "CACHE_VERSION", "default_cache_dir"]
+
+# Bump when the record schema or the fingerprint feature layout changes.
+CACHE_VERSION = 1
+
+
+def default_cache_dir() -> str:
+    env = os.environ.get("REPRO_TUNE_CACHE")
+    if env:
+        return env
+    return os.path.join(os.path.expanduser("~"), ".cache", "repro-tune")
+
+
+@dataclasses.dataclass
+class CacheStats:
+    hits: int = 0        # exact fingerprint-key hits
+    near_hits: int = 0   # near-match (fingerprint-distance) hits
+    misses: int = 0
+
+    @property
+    def lookups(self) -> int:
+        return self.hits + self.near_hits + self.misses
+
+    @property
+    def hit_rate(self) -> float:
+        n = self.lookups
+        return (self.hits + self.near_hits) / n if n else 0.0
+
+    def __str__(self) -> str:
+        return (f"hits={self.hits} near={self.near_hits} "
+                f"misses={self.misses} rate={self.hit_rate:.2f}")
+
+
+class PlanCache:
+    """Fingerprint-keyed plan store: disk JSON + in-memory LRU front."""
+
+    def __init__(self, path: Optional[str] = None, *, lru_size: int = 128):
+        self.dir = path or default_cache_dir()
+        self.file = os.path.join(self.dir, "plans.json")
+        self.lru_size = lru_size
+        self._lru: "OrderedDict[str, Dict[str, Any]]" = OrderedDict()
+        self._entries: Optional[Dict[str, Dict[str, Any]]] = None
+        self.stats = CacheStats()
+
+    # -- disk ---------------------------------------------------------------
+
+    def _load(self) -> Dict[str, Dict[str, Any]]:
+        """All on-disk entries; {} on absence, corruption or version skew."""
+        if self._entries is not None:
+            return self._entries
+        try:
+            with open(self.file) as f:
+                blob = json.load(f)
+            if blob.get("version") == CACHE_VERSION:
+                self._entries = dict(blob.get("entries", {}))
+            else:
+                self._entries = {}   # version mismatch: invalidate
+        except (OSError, ValueError):
+            self._entries = {}
+        return self._entries
+
+    def _save(self) -> None:
+        os.makedirs(self.dir, exist_ok=True)
+        blob = {"version": CACHE_VERSION, "entries": self._load()}
+        fd, tmp = tempfile.mkstemp(dir=self.dir, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(blob, f, indent=1, sort_keys=True)
+            os.replace(tmp, self.file)
+        except BaseException:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+            raise
+
+    # -- LRU front ----------------------------------------------------------
+
+    def _touch(self, key: str, record: Dict[str, Any]) -> None:
+        self._lru[key] = record
+        self._lru.move_to_end(key)
+        while len(self._lru) > self.lru_size:
+            self._lru.popitem(last=False)
+
+    # -- API ----------------------------------------------------------------
+
+    def get(self, key: str) -> Optional[Dict[str, Any]]:
+        """Exact-key lookup (counts one hit or miss)."""
+        rec = self.peek(key)
+        if rec is not None:
+            self.stats.hits += 1
+        else:
+            self.stats.misses += 1
+        return rec
+
+    def peek(self, key: str) -> Optional[Dict[str, Any]]:
+        """Exact-key lookup with no stats side effects."""
+        if key in self._lru:
+            self._lru.move_to_end(key)
+            return self._lru[key]
+        rec = self._load().get(key)
+        if rec is not None:
+            self._touch(key, rec)
+        return rec
+
+    def put(self, key: str, record: Dict[str, Any]) -> None:
+        self._load()[key] = record
+        self._touch(key, record)
+        self._save()
+
+    def nearest(self, features, *, dtype: str, n_cols: int, backend: str,
+                max_distance: float) -> Optional[Dict[str, Any]]:
+        """Closest same-context entry within ``max_distance`` (no stats)."""
+        best, best_d = None, max_distance
+        for rec in self._load().values():
+            if (rec.get("dtype") != dtype or rec.get("n_cols") != n_cols
+                    or rec.get("backend") != backend):
+                continue
+            d = feature_distance(features, rec.get("fingerprint", []))
+            if d <= best_d:
+                best, best_d = rec, d
+        return best
+
+    def lookup(self, key: str, *, features, dtype: str, n_cols: int,
+               backend: str, max_distance: float = 0.0
+               ) -> Optional[Dict[str, Any]]:
+        """Exact then near lookup, with unified hit/near/miss accounting."""
+        rec = self.peek(key)
+        if rec is not None:
+            self.stats.hits += 1
+            return rec
+        if max_distance > 0.0:
+            rec = self.nearest(features, dtype=dtype, n_cols=n_cols,
+                               backend=backend, max_distance=max_distance)
+            if rec is not None:
+                self.stats.near_hits += 1
+                return rec
+        self.stats.misses += 1
+        return None
+
+    def __len__(self) -> int:
+        return len(self._load())
+
+    def clear(self) -> None:
+        self._entries = {}
+        self._lru.clear()
+        self._save()

@@ -88,3 +88,7 @@ def test_coo_duplicate_accumulation():
     dense = csr_to_dense(csr)
     assert dense[0, 1] == pytest.approx(5.0)
     assert dense[1, 0] == pytest.approx(4.0)
+    # Coalescing happens during *construction* (full regression suite:
+    # tests/test_tune.py, which also runs in hypothesis-free environments).
+    coords = list(zip(csr.row_ids.tolist(), csr.col_idx.tolist()))
+    assert len(coords) == len(set(coords))

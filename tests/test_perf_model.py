@@ -46,3 +46,18 @@ def test_default_candidates_valid():
 def test_fit_requires_enough_samples():
     with pytest.raises(ValueError):
         fit_perf_model([(0, 0), (1, 1)], [0.0, 1.0])
+
+
+def test_fit_rank_deficient_falls_back_to_ridge():
+    """Fewer than 5 distinct (x, y) points underdetermine Eq. 2; the fit
+    must stay finite and interpolate the measurements instead of returning
+    an arbitrary exact solution that best_allocation would extrapolate.
+    (Also covered hypothesis-free in tests/test_tune.py.)"""
+    pts = [(1, 1), (2, 2), (4, 4)] * 2          # 3 distinct points, 6 samples
+    perfs = [2.0, 4.0, 8.0] * 2                 # linear along the diagonal
+    m = fit_perf_model(pts, perfs)
+    assert np.isfinite(m.coef).all()
+    for (x, y), p in zip(pts, perfs):
+        assert float(m.predict(x, y)) == pytest.approx(p, rel=1e-3)
+    x, y = m.best_allocation(8)
+    assert 0 < x + y <= 8                        # scheduler still sane
