@@ -1,19 +1,29 @@
 """Benchmark orchestrator — one function per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV rows (and mirrors them to
-benchmarks/results/bench.csv).
+benchmarks/results/bench.csv).  Suites that emit structured records (fig4's
+panelization columns) also land in benchmarks/results/bench.json — the
+machine-readable perf trajectory (``panel_g``, grid-step reductions,
+wall-clock) that CI diffs against.
 
   fig4   — FP64/FP32 SpMM throughput vs TACO-like / Armadillo-like (Fig. 4)
+           + the G=1 vs tuned-G panelization columns
   fig5   — bf16(=FP16) SpMM vs block-only / csr-only strategies (Fig. 5)
   sec43  — adaptive scheduling ablation (§4.3)
   table3 — modeled energy efficiency (Table 3)
   table4 — end-to-end GCN training (§4.5 / Table 4)
   roofline — §Roofline terms for every dry-run cell (assignment)
   autotune — model-only vs measured/cached plans + cache hit rates
+
+``--smoke`` shrinks the suites that support it (tiny matrices, fewer
+repeats) for CI: kernel-layer regressions then surface as benchmark
+failures, not only as test failures.
 """
 from __future__ import annotations
 
 import argparse
+import inspect
+import json
 import os
 import sys
 import traceback
@@ -24,6 +34,8 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma list: fig4,fig5,sec43,table3,table4,"
                          "roofline,autotune")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny-suite CI mode (suites that support it)")
     args = ap.parse_args()
 
     from . import (autotune_suite, fig4_throughput, fig5_halfprec, roofline,
@@ -39,9 +51,10 @@ def main() -> None:
     }
     chosen = (args.only.split(",") if args.only else list(suites))
 
-    out_path = os.path.join(os.path.dirname(__file__), "results", "bench.csv")
-    os.makedirs(os.path.dirname(out_path), exist_ok=True)
-    rows = []
+    results_dir = os.path.join(os.path.dirname(__file__), "results")
+    os.makedirs(results_dir, exist_ok=True)
+    rows: list[str] = []
+    records: list[dict] = []
 
     def emit(line: str):
         print(line, flush=True)
@@ -50,13 +63,33 @@ def main() -> None:
     emit("name,us_per_call,derived")
     failures = 0
     for name in chosen:
+        fn = suites[name]
+        kwargs = {}
+        params = inspect.signature(fn).parameters
+        if "smoke" in params:
+            kwargs["smoke"] = args.smoke
+        if "record" in params:
+            kwargs["record"] = records.append
         try:
-            suites[name](out=emit)
+            fn(out=emit, **kwargs)
         except Exception:
             failures += 1
             emit(f"{name}_FAILED,0,{traceback.format_exc(limit=1).strip()}")
-    with open(out_path, "w") as f:
+    with open(os.path.join(results_dir, "bench.csv"), "w") as f:
         f.write("\n".join(rows) + "\n")
+    # bench.json merges per suite: records of the suites run THIS invocation
+    # are replaced (so a re-run can never leave stale numbers), records of
+    # suites not selected by --only survive.
+    json_path = os.path.join(results_dir, "bench.json")
+    try:
+        with open(json_path) as f:
+            kept = [r for r in json.load(f)
+                    if not any(str(r.get("suite", "")).startswith(name)
+                               for name in chosen)]
+    except (OSError, ValueError):
+        kept = []
+    with open(json_path, "w") as f:
+        json.dump(kept + records, f, indent=1, sort_keys=True)
     if failures:
         sys.exit(1)
 

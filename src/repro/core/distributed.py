@@ -208,7 +208,7 @@ def shard_loops_auto(fmt: LoopsFormat, num_devices: int, *,
             backend=f"dist{num_devices}",
             r_frac=fmt.r_boundary / max(fmt.nrows, 1),
             t_vpu=g_vpu, t_mxu=num_devices - g_vpu,
-            br=fmt.bcsr_part.br))
+            br=fmt.bcsr_part.br, panel_g=fmt.panel_g))
     return shard_loops(fmt, num_devices, g_vpu)
 
 

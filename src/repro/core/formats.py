@@ -24,6 +24,7 @@ TPU-specific invariants (documented deviations from the Arm layout):
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Tuple
 
 import numpy as np
@@ -31,13 +32,33 @@ import numpy as np
 __all__ = [
     "CSR",
     "VectorBCSR",
+    "PanelCSR",
+    "PanelBCSR",
     "LoopsFormat",
     "csr_from_dense",
     "csr_to_dense",
     "csr_slice_rows",
     "bcsr_from_csr_rows",
+    "panelize_csr",
+    "panelize_bcsr",
     "loops_from_csr",
+    "SUBLANE_ROWS",
+    "HALF_PACKED_ROWS",
+    "DEFAULT_PANEL_G",
 ]
+
+# Tile heights (paper: cntd / cntf / cnth — elements per vector register).
+# TPU vregs are (8, 128): fp32/fp64 tiles use the 8-sublane extent; bf16/fp16
+# pack two values per 32-bit lane, doubling the natural tile height exactly as
+# the paper's cnth = 2 * cntf.  ``core.spmm.default_br`` selects between them.
+SUBLANE_ROWS = 8
+HALF_PACKED_ROWS = 2 * SUBLANE_ROWS
+
+# Default panel width G: nonzeros (CSR part) / tiles (BCSR part) processed per
+# kernel grid step.  8 matches the paper's Figure-2 multi-tile fmopa batching
+# (several outer-product rounds per ZA-tile visit) and shrinks the Pallas grid
+# from nnz to ~nnz/G steps.
+DEFAULT_PANEL_G = 8
 
 
 @dataclasses.dataclass(frozen=True)
@@ -108,13 +129,88 @@ class VectorBCSR:
 
 
 @dataclasses.dataclass(frozen=True)
+class PanelCSR:
+    """CSR-part nonzeros packed into dense ``(P, G)`` panels.
+
+    Panel ``p`` holds up to ``G`` nonzeros of the single output row
+    ``panel_rows[p]``: the kernel gathers the ``G`` rows
+    ``B[panel_cols[p]]`` once and broadcast-multiply-reduces them against
+    ``panel_vals[p]`` in one grid step — the paper's Figure-2 multi-tile
+    batching applied to the vector pipeline.  Rows never share a panel
+    (the scatter-output index map writes one row per step), so a row's
+    last panel is padded: ``panel_mask`` is 1 for real entries, 0 for
+    padding (padding has col 0 and value 0).  ``panel_rows`` is
+    nondecreasing and covers every row at least once, preserving the
+    output-coverage and monotone-revisit invariants of the G=1 layout.
+    """
+
+    panel_rows: np.ndarray  # (P,) int32 output row per panel, nondecreasing
+    panel_cols: np.ndarray  # (P, G) int32 gather rows of B (0 where padded)
+    panel_vals: np.ndarray  # (P, G) values (0 where padded)
+    panel_mask: np.ndarray  # (P, G) validity, same dtype as vals (1 / 0)
+    g: int
+    nrows: int
+    shape: Tuple[int, int]
+
+    @property
+    def npanels(self) -> int:
+        return int(self.panel_rows.shape[0])
+
+    def astype(self, dtype) -> "PanelCSR":
+        return dataclasses.replace(self,
+                                   panel_vals=self.panel_vals.astype(dtype),
+                                   panel_mask=self.panel_mask.astype(dtype))
+
+
+@dataclasses.dataclass(frozen=True)
+class PanelBCSR:
+    """BCSR-part tiles packed into dense ``(P, Br, G)`` value panels.
+
+    Panel ``p`` stacks up to ``G`` of block-row ``panel_rows[p]``'s
+    ``Br x 1`` column tiles side by side: ``panel_vals[p]`` is a real
+    ``(Br, G)`` operand and the kernel's contraction becomes one
+    ``(Br, G) @ (G, bn)`` MXU matmul per grid step instead of a chain of
+    G rank-1 updates — the multi-round fmopa batching of paper Figure 2.
+    Block-rows never share a panel; the trailing panel of each block-row
+    is padded (mask 0, zero columns).  ``panel_rows`` is nondecreasing.
+    """
+
+    panel_rows: np.ndarray  # (P,) int32 block-row per panel, nondecreasing
+    panel_cols: np.ndarray  # (P, G) int32 gather rows of B (0 where padded)
+    panel_vals: np.ndarray  # (P, Br, G) tile values (zero columns = padding)
+    panel_mask: np.ndarray  # (P, G) validity, same dtype as vals (1 / 0)
+    g: int
+    br: int
+    nblocks: int
+    nrows: int              # logical rows covered (<= nblocks * br)
+    shape: Tuple[int, int]
+
+    @property
+    def npanels(self) -> int:
+        return int(self.panel_rows.shape[0])
+
+    def astype(self, dtype) -> "PanelBCSR":
+        return dataclasses.replace(self,
+                                   panel_vals=self.panel_vals.astype(dtype),
+                                   panel_mask=self.panel_mask.astype(dtype))
+
+
+@dataclasses.dataclass(frozen=True)
 class LoopsFormat:
-    """The hybrid LOOPS format (paper §3.2.1, Algorithm 1)."""
+    """The hybrid LOOPS format (paper §3.2.1, Algorithm 1).
+
+    ``csr_panels``/``bcsr_panels`` are the G-wide panelized views of the two
+    parts (``panel_g`` is the width G).  They are built lazily on first
+    access and cached: the Pallas kernels execute the panels, while the
+    pure-jnp reference executes the flat ``csr_part``/``bcsr_part`` arrays
+    and never pays for the packing — both views hold identical values.
+    """
 
     csr_part: CSR          # rows [0, r_boundary)
     bcsr_part: VectorBCSR  # rows [r_boundary, nrows)
     r_boundary: int
     shape: Tuple[int, int]
+    panel_g: int = 1
 
     @property
     def nrows(self) -> int:
@@ -124,13 +220,25 @@ class LoopsFormat:
     def ncols(self) -> int:
         return self.shape[1]
 
-    @property
+    @functools.cached_property
+    def csr_panels(self) -> "PanelCSR":
+        return panelize_csr(self.csr_part, self.panel_g)
+
+    @functools.cached_property
+    def bcsr_panels(self) -> "PanelBCSR":
+        return panelize_bcsr(self.bcsr_part, self.panel_g)
+
+    @functools.cached_property
     def nnz(self) -> int:
-        # Logical nonzeros (excluding structural zero padding).
+        # Logical nonzeros (excluding structural zero padding).  Cached:
+        # ``loops_spmm`` consults it on every call and the count is an
+        # O(nnz) host scan over the value arrays.
         return int(np.count_nonzero(self.csr_part.vals)
                    + np.count_nonzero(self.bcsr_part.tile_vals))
 
     def astype(self, dtype) -> "LoopsFormat":
+        # Panel views are derived state: the replaced instance rebuilds
+        # them (lazily) from the cast parts.
         return dataclasses.replace(
             self, csr_part=self.csr_part.astype(dtype),
             bcsr_part=self.bcsr_part.astype(dtype))
@@ -275,17 +383,95 @@ def bcsr_from_csr_rows(csr: CSR, start: int, stop: int, br: int) -> VectorBCSR:
 
 
 # ---------------------------------------------------------------------------
+# G-wide panelization (paper Figure 2 multi-tile batching)
+# ---------------------------------------------------------------------------
+
+def _pack_panels(group_of_item: np.ndarray, group_ptr: np.ndarray,
+                 ngroups: int, g: int):
+    """Shared panel bookkeeping: split each group's items into ceil(n/g)
+    dense panels (>= 1 per group so output coverage is preserved).
+
+    Returns ``(panel_rows, item_panel, item_lane, npanels)`` where item ``t``
+    lands in panel ``item_panel[t]`` at lane ``item_lane[t]``.
+    """
+    counts = np.diff(group_ptr).astype(np.int64)
+    per_group = np.maximum(-(-counts // g), 1)          # ceil, min 1
+    start = np.zeros(ngroups + 1, np.int64)
+    np.cumsum(per_group, out=start[1:])
+    npanels = int(start[-1])
+    panel_rows = np.repeat(np.arange(ngroups, dtype=np.int32),
+                           per_group).astype(np.int32)
+    offset = np.arange(len(group_of_item), dtype=np.int64) \
+        - group_ptr[group_of_item].astype(np.int64)
+    item_panel = start[group_of_item] + offset // g
+    item_lane = offset % g
+    return panel_rows, item_panel, item_lane, npanels
+
+
+def panelize_csr(csr: CSR, g: int) -> PanelCSR:
+    """Pack the CSR-part nonzeros into ``(P, G)`` panels, G per row-visit.
+
+    O(nnz) and fully vectorised; a row with ``c`` nonzeros yields
+    ``max(ceil(c / g), 1)`` panels (empty rows get one fully-masked panel so
+    the kernel still zero-initialises their output block).
+    """
+    if g < 1:
+        raise ValueError(f"panel width g must be >= 1, got {g}")
+    panel_rows, pnl, lane, npanels = _pack_panels(
+        csr.row_ids, csr.row_ptr, csr.nrows, g)
+    cols = np.zeros((npanels, g), np.int32)
+    vals = np.zeros((npanels, g), csr.vals.dtype)
+    mask = np.zeros((npanels, g), csr.vals.dtype)
+    cols[pnl, lane] = csr.col_idx
+    vals[pnl, lane] = csr.vals
+    mask[pnl, lane] = 1
+    return PanelCSR(panel_rows=panel_rows, panel_cols=cols, panel_vals=vals,
+                    panel_mask=mask, g=g, nrows=csr.nrows, shape=csr.shape)
+
+
+def panelize_bcsr(bcsr: VectorBCSR, g: int) -> PanelBCSR:
+    """Pack the BCSR-part ``Br x 1`` tiles into ``(P, Br, G)`` panels.
+
+    Each panel stacks up to G same-block-row tiles into one ``(Br, G)``
+    matmul operand; block-rows with ``t`` tiles yield ``max(ceil(t/g), 1)``
+    panels.
+    """
+    if g < 1:
+        raise ValueError(f"panel width g must be >= 1, got {g}")
+    panel_rows, pnl, lane, npanels = _pack_panels(
+        bcsr.tile_rows, bcsr.block_ptr, bcsr.nblocks, g)
+    cols = np.zeros((npanels, g), np.int32)
+    mask = np.zeros((npanels, g), bcsr.tile_vals.dtype)
+    cols[pnl, lane] = bcsr.tile_cols
+    mask[pnl, lane] = 1
+    # (P, G, Br) scatter then transpose to the (P, Br, G) operand layout.
+    vals = np.zeros((npanels, g, bcsr.br), bcsr.tile_vals.dtype)
+    vals[pnl, lane] = bcsr.tile_vals
+    return PanelBCSR(panel_rows=panel_rows, panel_cols=cols,
+                     panel_vals=np.ascontiguousarray(vals.transpose(0, 2, 1)),
+                     panel_mask=mask, g=g, br=bcsr.br, nblocks=bcsr.nblocks,
+                     nrows=bcsr.nrows, shape=bcsr.shape)
+
+
+# ---------------------------------------------------------------------------
 # Hybrid LOOPS format (Algorithm 1)
 # ---------------------------------------------------------------------------
 
-def loops_from_csr(csr: CSR, r_boundary: int, br: int) -> LoopsFormat:
-    """Algorithm 1: CSR-part = rows [0, r_boundary), BCSR-part = the rest."""
+def loops_from_csr(csr: CSR, r_boundary: int, br: int,
+                   panel_g: int = DEFAULT_PANEL_G) -> LoopsFormat:
+    """Algorithm 1: CSR-part = rows [0, r_boundary), BCSR-part = the rest.
+
+    ``panel_g`` is the panel width the Pallas kernels consume (G nonzeros /
+    tiles per grid step); the panelized views are derived lazily from the
+    flat arrays on first kernel use.
+    """
     if not 0 <= r_boundary <= csr.nrows:
         raise ValueError(f"r_boundary {r_boundary} out of range [0, {csr.nrows}]")
-    csr_part = csr_slice_rows(csr, 0, r_boundary)
-    bcsr_part = bcsr_from_csr_rows(csr, r_boundary, csr.nrows, br)
-    return LoopsFormat(csr_part=csr_part, bcsr_part=bcsr_part,
-                       r_boundary=r_boundary, shape=csr.shape)
+    return LoopsFormat(csr_part=csr_slice_rows(csr, 0, r_boundary),
+                       bcsr_part=bcsr_from_csr_rows(csr, r_boundary,
+                                                    csr.nrows, br),
+                       r_boundary=r_boundary, shape=csr.shape,
+                       panel_g=panel_g)
 
 
 def permute_rows(csr: CSR, order: np.ndarray) -> CSR:
@@ -300,7 +486,8 @@ def permute_rows(csr: CSR, order: np.ndarray) -> CSR:
                             csr.shape)
 
 
-def loops_from_csr_sorted(csr: CSR, r_boundary: int, br: int
+def loops_from_csr_sorted(csr: CSR, r_boundary: int, br: int,
+                          panel_g: int = DEFAULT_PANEL_G
                           ) -> Tuple[LoopsFormat, np.ndarray]:
     """Beyond-paper variant (§Perf): sort rows by nnz descending before the
     positional split, so scattered hub rows all land in the CSR(vector) part
@@ -311,4 +498,5 @@ def loops_from_csr_sorted(csr: CSR, r_boundary: int, br: int
     either apply the inverse permutation to the output or keep operating in
     permuted row space (GNN layers don't care about row order)."""
     order = np.argsort(-np.diff(csr.row_ptr), kind="stable").astype(np.int64)
-    return loops_from_csr(permute_rows(csr, order), r_boundary, br), order
+    return loops_from_csr(permute_rows(csr, order), r_boundary, br,
+                          panel_g=panel_g), order

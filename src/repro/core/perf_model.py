@@ -27,15 +27,35 @@ __all__ = ["QuadraticPerfModel", "fit_perf_model", "best_allocation",
 
 @dataclasses.dataclass(frozen=True)
 class QuadraticPerfModel:
-    """perf(x, y) = a0 + a1 x + a2 y + a3 x**2 + a4 y**2 (paper Eq. 2)."""
+    """perf(x, y) = a0 + a1 x + a2 y + a3 x**2 + a4 y**2 (paper Eq. 2).
 
-    coef: np.ndarray  # (5,) [a0, a1, a2, a3, a4]
+    Panel-extended variant (this repo's kernel layer): when calibrated over
+    ``(x, y, g)`` samples — ``g`` the panel width of the G-wide kernels —
+    two extra terms model the panelization axis with the same no-cross-term
+    independence assumption:
 
-    def predict(self, x, y):
+        perf(x, y, g) = Eq.2(x, y) + a5 g + a6 g**2
+
+    (the grid-step reduction saturates once padding dominates, which the
+    concave ``a6 < 0`` fit captures).  A 5-coefficient model simply ignores
+    ``g``, keeping every pre-panelization caller intact.
+    """
+
+    coef: np.ndarray  # (5,) [a0..a4] or (7,) [a0..a4, a5, a6]
+
+    @property
+    def has_panel_terms(self) -> bool:
+        return int(self.coef.shape[0]) >= 7
+
+    def predict(self, x, y, g=None):
         x = np.asarray(x, np.float64)
         y = np.asarray(y, np.float64)
         a = self.coef
-        return a[0] + a[1] * x + a[2] * y + a[3] * x * x + a[4] * y * y
+        base = a[0] + a[1] * x + a[2] * y + a[3] * x * x + a[4] * y * y
+        if g is not None and self.has_panel_terms:
+            g = np.asarray(g, np.float64)
+            base = base + a[5] * g + a[6] * g * g
+        return base
 
     def best_allocation(self, total: int,
                         allow_zero: bool = True) -> Tuple[int, int]:
@@ -52,13 +72,42 @@ class QuadraticPerfModel:
                     best, best_perf = (x, y), p
         return best
 
+    def best_allocation_g(self, total: int,
+                          g_choices: Sequence[int] = (1, 4, 8),
+                          allow_zero: bool = True) -> Tuple[int, int, int]:
+        """Eq. 3 extended with the panel-width axis: argmax over
+        ``x + y <= total`` and ``g in g_choices``."""
+        lo = 0 if allow_zero else 1
+        best, best_perf = (lo, lo, min(g_choices)), -np.inf
+        for x in range(lo, total + 1):
+            for y in range(lo, total - x + 1):
+                if x + y == 0:
+                    continue
+                for g in g_choices:
+                    p = float(self.predict(x, y, g))
+                    if p > best_perf:
+                        best, best_perf = (x, y, g), p
+        return best
 
-def fit_perf_model(samples: Sequence[Tuple[int, int]],
+
+def _design(samples: np.ndarray) -> np.ndarray:
+    """Design matrix for Eq. 2 ((n, 2) samples) or its panel-extended form
+    ((n, 3) samples with a trailing g column)."""
+    x, y = samples[:, 0], samples[:, 1]
+    cols = [np.ones_like(x), x, y, x * x, y * y]
+    if samples.shape[1] == 3:
+        g = samples[:, 2]
+        cols.extend([g, g * g])
+    return np.stack(cols, axis=1)
+
+
+def fit_perf_model(samples: Sequence[Tuple[int, ...]],
                    perfs: Sequence[float]) -> QuadraticPerfModel:
-    """Least-squares fit of Eq. 2 over measured (x, y) -> perf samples.
+    """Least-squares fit of Eq. 2 over measured (x, y) -> perf samples, or of
+    the panel-extended form over (x, y, g) triples.
 
-    Rank-deficient candidate sets (fewer than 5 *distinct* (x, y) points —
-    e.g. a caller probing only the axes' endpoints) underdetermine the 5
+    Rank-deficient candidate sets (fewer distinct points than coefficients —
+    e.g. a caller probing only the axes' endpoints) underdetermine the
     coefficients; plain ``lstsq`` then returns one of infinitely many exact
     fits whose extrapolation ``best_allocation`` would trust blindly.  We
     fall back to a ridge (Tikhonov) solution: minimal-norm coefficients that
@@ -66,10 +115,13 @@ def fit_perf_model(samples: Sequence[Tuple[int, int]],
     the argmax cannot run away on unmeasured configurations.
     """
     xy = np.asarray(samples, np.float64)
-    if xy.ndim != 2 or xy.shape[1] != 2 or xy.shape[0] < 5:
-        raise ValueError("need >= 5 (x, y) samples to fit 5 coefficients")
-    x, y = xy[:, 0], xy[:, 1]
-    design = np.stack([np.ones_like(x), x, y, x * x, y * y], axis=1)
+    if xy.ndim != 2 or xy.shape[1] not in (2, 3):
+        raise ValueError("samples must be (x, y) pairs or (x, y, g) triples")
+    ncoef = 5 if xy.shape[1] == 2 else 7
+    if xy.shape[0] < ncoef:
+        raise ValueError(f"need >= {ncoef} samples to fit {ncoef} "
+                         "coefficients")
+    design = _design(xy)
     p = np.asarray(perfs, np.float64)
     if np.linalg.matrix_rank(design) < design.shape[1]:
         ata = design.T @ design
@@ -94,17 +146,24 @@ def default_candidates(total: int) -> Iterable[Tuple[int, int]]:
     return sorted((x, y) for (x, y) in cand if 0 < x + y <= total)
 
 
-def calibrate(measure: Callable[[int, int], float], total: int,
-              candidates: Iterable[Tuple[int, int]] | None = None
+def calibrate(measure: Callable[..., float], total: int,
+              candidates: Iterable[Tuple[int, ...]] | None = None,
+              g_choices: Sequence[int] | None = None
               ) -> QuadraticPerfModel:
     """Fit the model from warm-up measurements.
 
     ``measure(x, y)`` returns a performance score (higher is better; e.g.
-    GFLOP/s) for ``x`` vector-group and ``y`` matrix-group workers.
+    GFLOP/s) for ``x`` vector-group and ``y`` matrix-group workers.  With
+    ``g_choices``, the warm-up sweep crosses the candidate splits (explicit
+    ``candidates`` included, unless they already carry a g column) with each
+    panel width and ``measure(x, y, g)`` is expected instead, yielding the
+    panel-extended model.
     """
     cand = list(candidates if candidates is not None
                 else default_candidates(total))
-    perfs = [measure(x, y) for (x, y) in cand]
+    if g_choices is not None and (not cand or len(cand[0]) == 2):
+        cand = [(x, y, g) for (x, y) in cand for g in g_choices]
+    perfs = [measure(*c) for c in cand]
     return fit_perf_model(cand, perfs)
 
 

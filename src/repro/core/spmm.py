@@ -19,10 +19,11 @@ import numpy as np
 
 from ..kernels import ops, ref
 from . import partition
-from .formats import CSR, LoopsFormat, loops_from_csr
+from .formats import (CSR, DEFAULT_PANEL_G, HALF_PACKED_ROWS, LoopsFormat,
+                      SUBLANE_ROWS, loops_from_csr)
 from .perf_model import QuadraticPerfModel
 
-__all__ = ["loops_spmm", "plan_and_convert", "SpmmPlan",
+__all__ = ["loops_spmm", "loops_grid_steps", "plan_and_convert", "SpmmPlan",
            "spmm_csr_baseline", "spmm_dense_baseline"]
 
 
@@ -34,25 +35,25 @@ class SpmmPlan:
     t_vpu: int      # paper: t_neon — workers for the CSR part
     t_mxu: int      # paper: t_sme  — workers for the BCSR part
     br: int         # tile height (cntd / cntf / cnth analogue)
+    panel_g: int = DEFAULT_PANEL_G  # panel width (Fig. 2 multi-tile count)
 
 
 def default_br(dtype) -> int:
     """Paper: B_r = elements per vector register (cntd=2 f64 ... cnth=8 f16 on
     128-bit NEON).  TPU registers are (8, 128) vregs and the MXU contraction
-    wants sublane multiples, so the natural tile height is the 8-sublane
-    extent; half precision packs 2x per 32-bit lane, mirroring cnth = 2*cntf."""
+    wants sublane multiples, so fp32 and fp64 both use the 8-sublane extent
+    (``formats.SUBLANE_ROWS``); half precision packs 2x per 32-bit lane
+    (``formats.HALF_PACKED_ROWS``), mirroring cnth = 2*cntf."""
     dtype = jnp.dtype(dtype)
     if dtype in (jnp.bfloat16, jnp.float16):
-        return 16
-    if dtype == jnp.float64:
-        return 8
-    return 8
+        return HALF_PACKED_ROWS
+    return SUBLANE_ROWS
 
 
 def plan_and_convert(csr: CSR, *, total_workers: int = 8,
                      model: QuadraticPerfModel | None = None,
                      tp_vpu: float = 1.0, tp_mxu: float = 4.0,
-                     br: int | None = None,
+                     br: int | None = None, panel_g: int | None = None,
                      paper_literal: bool = False,
                      tuner=None) -> tuple[LoopsFormat, SpmmPlan]:
     """Pick (t_vpu, t_mxu) via the perf model, solve Eq. 1, run Algorithm 1.
@@ -70,6 +71,7 @@ def plan_and_convert(csr: CSR, *, total_workers: int = 8,
     if tuner is not None:
         return tuner.tune(csr)
     br = br or default_br(csr.vals.dtype)
+    panel_g = panel_g or DEFAULT_PANEL_G
     if model is not None:
         t_vpu, t_mxu = model.best_allocation(total_workers)
     else:
@@ -78,8 +80,8 @@ def plan_and_convert(csr: CSR, *, total_workers: int = 8,
     r_b = partition.choose_r_boundary(
         csr.nrows, tp_vpu, tp_mxu, t_vpu, t_mxu, br=br,
         paper_literal=paper_literal)
-    return loops_from_csr(csr, r_b, br), SpmmPlan(
-        r_boundary=r_b, t_vpu=t_vpu, t_mxu=t_mxu, br=br)
+    return loops_from_csr(csr, r_b, br, panel_g=panel_g), SpmmPlan(
+        r_boundary=r_b, t_vpu=t_vpu, t_mxu=t_mxu, br=br, panel_g=panel_g)
 
 
 def loops_spmm(fmt: LoopsFormat, b: jax.Array, *, backend: str | None = None,
@@ -89,19 +91,66 @@ def loops_spmm(fmt: LoopsFormat, b: jax.Array, *, backend: str | None = None,
     The CSR-part rows land in C[:r_boundary], the BCSR-part rows in
     C[r_boundary:]; each output row is written by exactly one kernel
     (paper §3.4 — conflict-free by construction).
+
+    On the Pallas backends a hybrid format executes single-pass
+    (:func:`repro.kernels.ops.loops_spmm_fused`): both kernels fill disjoint
+    row ranges of ONE buffer through ``input_output_aliases`` + offset
+    index_maps, so no ``concatenate`` copy appears in the jaxpr.  The
+    two-output + concatenate fallback remains for the jnp reference and for
+    boundaries not aligned to the tile height.
     """
+    backend = backend or ops.default_backend()
     out_dtype = out_dtype or ref.acc_dtype_for(
         jnp.dtype(fmt.csr_part.vals.dtype))
+    if fmt.nnz == 0:
+        # All-zero matrix: every stored entry is structural padding, so the
+        # product is identically zero — including the nrows > 0 case, which
+        # must yield a full (nrows, N) block, not a (0, N) stub.
+        return jnp.zeros((fmt.nrows, b.shape[1]), out_dtype)
+    has_csr = fmt.r_boundary > 0
+    has_bcsr = fmt.r_boundary < fmt.nrows
+    pallas = backend != "jnp"   # panel views only materialise for Pallas
+    if (has_csr and has_bcsr and pallas
+            and fmt.r_boundary % fmt.bcsr_part.br == 0):
+        return ops.loops_spmm_fused(fmt, b, backend=backend, bn=bn,
+                                    out_dtype=out_dtype)
     parts = []
-    if fmt.r_boundary > 0:
+    if has_csr:
         parts.append(ops.csr_spmm(fmt.csr_part, b, backend=backend, bn=bn,
-                                  out_dtype=out_dtype))
-    if fmt.r_boundary < fmt.nrows:
+                                  out_dtype=out_dtype,
+                                  panels=fmt.csr_panels if pallas else None))
+    if has_bcsr:
         parts.append(ops.bcsr_spmm(fmt.bcsr_part, b, backend=backend, bn=bn,
-                                   out_dtype=out_dtype))
+                                   out_dtype=out_dtype,
+                                   panels=fmt.bcsr_panels if pallas
+                                   else None))
     if not parts:
-        return jnp.zeros((0, b.shape[1]), out_dtype)
+        return jnp.zeros((fmt.nrows, b.shape[1]), out_dtype)
     return parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=0)
+
+
+def loops_grid_steps(fmt: LoopsFormat, n_cols: int,
+                     bn: int | None = None) -> int:
+    """Total Pallas grid steps to execute ``fmt`` against an (K, n_cols)
+    operand — the hardware-independent cost proxy the benchmarks track.
+
+    With G-wide panels the inner grid walks panels, not nonzeros, so the
+    count drops from ``(nnz_csr + ntiles) * col_blocks`` at G=1 towards a
+    ``~G``-fold reduction (padding at row/block-row boundaries is the gap
+    from the ideal).
+    """
+    bn = bn or min(n_cols, 512)
+    col_blocks = -(-n_cols // bn)
+    p_csr = fmt.csr_panels.npanels
+    p_bcsr = fmt.bcsr_panels.npanels
+    # A part that loops_spmm skips contributes nothing — the empty BCSR part
+    # is not inherently zero-count (``bcsr_from_csr_rows`` keeps >= 1
+    # structural pad tile even for zero rows).
+    if fmt.r_boundary == 0:
+        p_csr = 0
+    if fmt.r_boundary == fmt.nrows:
+        p_bcsr = 0
+    return (p_csr + p_bcsr) * col_blocks
 
 
 # ---------------------------------------------------------------------------

@@ -6,12 +6,22 @@ tile contributes a rank-1 update
 
     C[block p] += tile_vals[t] (x) B[tile_cols[t], :]
 
-accumulated in a ZA tile register.  On TPU the accumulator is a VMEM block and
-the rank-1 updates stream through the MXU: a chain of ``(Br,1) @ (1,bn)`` dots
-accumulated into the same resident block is exactly how the systolic array
-consumes a matmul — the MXU *is* a hardware "sum of outer products" engine, so
-the paper's fmopa loop maps 1:1 onto consecutive grid steps that revisit one
-output block.
+accumulated in a ZA tile register.  On TPU the accumulator is a VMEM block
+streamed through the MXU.
+
+Panelized execution (paper Figure 2 "multi-tile" batching)
+----------------------------------------------------------
+The kernel consumes ``(P, Br, G)`` panels (``repro.core.formats.PanelBCSR``):
+G same-block-row tiles stacked side by side form a real ``(Br, G)`` operand,
+and one grid step performs a single
+
+    C[block] += A_panel(Br, G) @ B_panel(G, bn)
+
+MXU contraction — G fmopa rounds batched per ZA-tile visit, exactly the
+paper's multi-tile optimisation.  The B panel is assembled in VMEM scratch
+from G scalar-prefetch-indexed row gathers with masked (padding-dropping)
+stores.  G = 1 degenerates to the historical rank-1-per-step kernel
+(``bcsr_spmm_pallas`` is that wrapper).
 
 Precision (§3.3 FP16 path, Algorithm 3): the paper uses the 2-way widening
 ``fmopa`` (two f16 outer products into one f32 ZA tile) with vzip register
@@ -21,13 +31,11 @@ half-in/single-accumulate contract without any shuffle — the packing is done
 by the hardware.  FP64 uses ``preferred_element_type=float64`` (lowered by
 XLA to VPU sequences on real TPUs, which have no f64 MXU mode).
 
-The paper's Figure-2 "multi-tile" optimisation (multiple 1 x cntd tiles of B
-per fmopa round, several ZA tiles in flight) is realised by the ``bn`` block
-width: one (1, bn) B block with bn = 128 * za covers ``za`` lane tiles per
-visit.
-
-grid = (N // bn, ntiles); ``tile_rows`` is nondecreasing so output-block
-revisiting is legal, exactly as in the CSR kernel.
+grid = (N // bn, P); ``panel_rows`` is nondecreasing so output-block
+revisiting is legal, exactly as in the CSR kernel.  ``carry`` +
+``row_block_offset`` support the fused single-pass ``loops_spmm``: the kernel
+writes its blocks at a row offset into a shared buffer whose other rows (the
+CSR part's) are preserved through ``input_output_aliases``.
 """
 from __future__ import annotations
 
@@ -38,31 +46,35 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .panel_common import first_last, panel_operands, split_panel_refs
 from .ref import acc_dtype_for
 
-__all__ = ["bcsr_spmm_pallas"]
+__all__ = ["bcsr_spmm_pallas", "bcsr_panels_spmm_pallas"]
 
 
-def _kernel(tile_rows_ref, tile_cols_ref, vals_ref, b_ref, o_ref, acc_ref):
-    k = pl.program_id(1)
-    ntiles = pl.num_programs(1)
-
-    row_here = tile_rows_ref[k]
-    row_prev = tile_rows_ref[jnp.maximum(k - 1, 0)]
-    row_next = tile_rows_ref[jnp.minimum(k + 1, ntiles - 1)]
-    first = jnp.logical_or(k == 0, row_here != row_prev)
-    last = jnp.logical_or(k == ntiles - 1, row_here != row_next)
+def _panel_kernel(g: int, has_carry: bool, *refs):
+    """One grid step: gather G rows of B into scratch, one (Br,G)@(G,bn)."""
+    rows_ref, _, vals_ref, mask_ref, b_refs, (o_ref, bpan_ref, acc_ref) = \
+        split_panel_refs(refs, g, has_carry)
+    first, last = first_last(rows_ref)
 
     @pl.when(first)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    a_tile = vals_ref[0]         # (Br, 1) column tile of A
-    b_row = b_ref[...]           # (1, bn) gathered row of B
-    # Rank-1 outer product, accumulated — the fmopa analogue.  For bf16 the
-    # MXU widens to fp32 in hardware (2-way fmopa equivalent).
+    # Masked gather: assemble the (G, bn) B panel in VMEM scratch, zeroing
+    # padding lanes (panels shorter than G at block-row boundaries).
+    for i, b_ref in enumerate(b_refs):
+        row = b_ref[...].astype(bpan_ref.dtype)
+        bpan_ref[i, :] = jnp.where(mask_ref[0, i] > 0, row,
+                                   jnp.zeros_like(row))[0]
+
+    # One real MXU matmul per grid step: G batched fmopa rounds (Figure 2)
+    # instead of a chain of rank-1 (Br,1)@(1,bn) updates.  For bf16 the MXU
+    # widens to fp32 in hardware (2-way fmopa equivalent).
+    a_panel = vals_ref[0]        # (Br, G)
     acc_ref[...] += jax.lax.dot_general(
-        a_tile, b_row, (((1,), (0,)), ((), ())),
+        a_panel, bpan_ref[...], (((1,), (0,)), ((), ())),
         preferred_element_type=acc_ref.dtype)
 
     @pl.when(last)
@@ -72,43 +84,86 @@ def _kernel(tile_rows_ref, tile_cols_ref, vals_ref, b_ref, o_ref, acc_ref):
 
 @functools.partial(
     jax.jit,
+    static_argnames=("nblocks", "row_block_offset", "out_rows", "bn",
+                     "out_dtype", "interpret"))
+def bcsr_panels_spmm_pallas(panel_rows: jax.Array, panel_cols: jax.Array,
+                            panel_vals: jax.Array, panel_mask: jax.Array,
+                            b: jax.Array, *, nblocks: int,
+                            row_block_offset: int = 0,
+                            out_rows: int | None = None,
+                            bn: int | None = None, out_dtype=None,
+                            interpret: bool = True,
+                            carry: jax.Array | None = None) -> jax.Array:
+    """Panelized vector-wise BCSR SpMM.
+
+    Args:
+      panel_rows: (P,) int32 block-row per panel, nondecreasing.
+      panel_cols: (P, G) int32 gather rows of ``b`` per panel lane.
+      panel_vals: (P, Br, G) stacked tile values (zero columns = padding).
+      panel_mask: (P, G) lane validity (1 real / 0 padding), vals dtype.
+      b:          (K, N) dense operand.
+      nblocks:    number of block-rows (static).
+      row_block_offset: first output block-row this kernel writes (static;
+                  the fused path sets it to ``r_boundary // Br``).
+      out_rows:   total rows of the returned array; defaults to
+                  ``(row_block_offset + nblocks) * Br``.
+      bn:         B/accumulator column width per visit (multi-ZA-tile
+                  factor); defaults to min(N, 512) = 4 lane tiles.
+      carry:      optional (out_rows, N) array aliased into the output; rows
+                  not visited here keep its contents (fused single-pass mode).
+    """
+    npanels, br, g = panel_vals.shape
+    n = b.shape[1]
+    bn = bn or min(n, 512)
+    if n % bn:
+        raise ValueError(f"N={n} not divisible by bn={bn}")
+    acc_dtype = acc_dtype_for(panel_vals.dtype)
+    out_dtype = out_dtype or acc_dtype
+    out_rows = out_rows or (row_block_offset + nblocks) * br
+    has_carry = carry is not None
+
+    def _rows(j, k, rows, cols):
+        return (row_block_offset + rows[k], j)
+
+    in_specs, args, aliases = panel_operands(
+        g=g, bn=bn,
+        vals_spec=pl.BlockSpec((1, br, g), lambda j, k, rows, cols: (k, 0, 0)),
+        vals=panel_vals, mask=panel_mask, b=b,
+        carry=carry, carry_spec=pl.BlockSpec((br, bn), _rows))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # panel_rows, panel_cols
+        grid=(n // bn, npanels),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((br, bn), _rows),
+        scratch_shapes=[pltpu.VMEM((g, bn), b.dtype),       # B panel
+                        pltpu.VMEM((br, bn), acc_dtype)],   # accumulator
+    )
+    return pl.pallas_call(
+        functools.partial(_panel_kernel, g, has_carry),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((out_rows, n), out_dtype),
+        input_output_aliases=aliases,
+        interpret=interpret,
+    )(panel_rows, panel_cols, *args)
+
+
+@functools.partial(
+    jax.jit,
     static_argnames=("nblocks", "bn", "out_dtype", "interpret"))
 def bcsr_spmm_pallas(tile_rows: jax.Array, tile_cols: jax.Array,
                      tile_vals: jax.Array, b: jax.Array, *, nblocks: int,
                      bn: int | None = None, out_dtype=None,
                      interpret: bool = True) -> jax.Array:
-    """Vector-wise BCSR SpMM; returns the padded (nblocks * Br, N) result.
+    """Flat-array entry point: one tile per panel (G = 1, rank-1 updates).
 
-    Args:
-      tile_rows: (T,) int32 block-row per tile, nondecreasing.
-      tile_cols: (T,) int32 gather row of ``b`` per tile.
-      tile_vals: (T, Br) tile values (Br = the paper's cntd/cntf/cnth).
-      b:         (K, N) dense operand.
-      nblocks:   number of block-rows (static).
-      bn:        B/accumulator column width per visit (multi-ZA-tile factor);
-                 defaults to min(N, 512) = 4 lane tiles.
+    Returns the padded (nblocks * Br, N) result.  Format-level callers
+    should prefer :func:`bcsr_panels_spmm_pallas` with a host-packed
+    ``PanelBCSR`` for real G-wide matmul panels.
     """
     ntiles, br = tile_vals.shape
-    n = b.shape[1]
-    bn = bn or min(n, 512)
-    if n % bn:
-        raise ValueError(f"N={n} not divisible by bn={bn}")
-    acc_dtype = acc_dtype_for(tile_vals.dtype)
-    out_dtype = out_dtype or acc_dtype
-
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,  # tile_rows, tile_cols
-        grid=(n // bn, ntiles),
-        in_specs=[
-            pl.BlockSpec((1, br, 1), lambda j, k, rows, cols: (k, 0, 0)),
-            pl.BlockSpec((1, bn), lambda j, k, rows, cols: (cols[k], j)),
-        ],
-        out_specs=pl.BlockSpec((br, bn), lambda j, k, rows, cols: (rows[k], j)),
-        scratch_shapes=[pltpu.VMEM((br, bn), acc_dtype)],
-    )
-    return pl.pallas_call(
-        _kernel,
-        grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((nblocks * br, n), out_dtype),
-        interpret=interpret,
-    )(tile_rows, tile_cols, tile_vals.reshape(ntiles, br, 1), b)
+    return bcsr_panels_spmm_pallas(
+        tile_rows, tile_cols.reshape(ntiles, 1),
+        tile_vals.reshape(ntiles, br, 1), jnp.ones((ntiles, 1),
+                                                   tile_vals.dtype),
+        b, nblocks=nblocks, bn=bn, out_dtype=out_dtype, interpret=interpret)

@@ -8,21 +8,36 @@ this kernel exists precisely so that irregular rows do not pay the
 outer-product padding cost (paper C1) and so that the matrix pipeline is left
 free for the BCSR-part (paper C3).
 
+Panelized execution (paper Figure 2 "multi-tile" batching)
+----------------------------------------------------------
+The kernel consumes ``(P, G)`` panels (``repro.core.formats.PanelCSR``): one
+grid step gathers the G rows ``B[panel_cols[p]]`` (G independent scalar-
+prefetch-indexed DMAs that all overlap with compute of the previous step) and
+masked-broadcast-multiply-reduces them against ``panel_vals[p]`` into the
+resident accumulator.  The grid shrinks from ``nnz`` to ``ceil(nnz/G)`` inner
+steps — the TPU analogue of batching several fmopa rounds per ZA-tile visit.
+G = 1 with a trivial mask reproduces the historical one-nonzero-per-step
+kernel exactly (``csr_spmm_pallas`` is that wrapper).
+
 Implementation notes
 --------------------
-* grid = (N // bn, nnz): the inner grid dimension walks nonzeros in (row, col)
-  order; the *output* BlockSpec index_map scatters to ``row_ids[k]`` which is
-  nondecreasing, so Pallas legally keeps the current output block resident in
-  VMEM across consecutive grid steps of the same row (the TPU analogue of
+* grid = (N // bn, P): the inner grid dimension walks panels in (row, col)
+  order; the *output* BlockSpec index_map scatters to ``panel_rows[p]`` which
+  is nondecreasing, so Pallas legally keeps the current output block resident
+  in VMEM across consecutive grid steps of the same row (the TPU analogue of
   keeping the NEON accumulator registers live across a row).
-* ``row_ids``/``col_idx`` arrive via scalar prefetch (SMEM) so the B-row
-  gather is expressed in the BlockSpec index_map — the standard Pallas-TPU
-  sparse-gather idiom; the DMA for step k+1 overlaps with compute of step k.
+* ``panel_rows``/``panel_cols`` arrive via scalar prefetch (SMEM) so the B-row
+  gathers are expressed in BlockSpec index_maps — the standard Pallas-TPU
+  sparse-gather idiom; the DMAs for step k+1 overlap with compute of step k.
 * Accumulation runs in fp32 scratch for {bf16, f16} inputs (f16f16f32
   contract) and in the native dtype for f32/f64.
-* every output row must appear in ``row_ids`` at least once (format layer
-  guarantees this via explicit zero entries) or its block would be left
+* every output row must appear in ``panel_rows`` at least once (format layer
+  guarantees this via >= 1 panel per row) or its block would be left
   uninitialised on real hardware.
+* ``carry``: optional full-size output operand aliased to the result
+  (``input_output_aliases``) for the fused single-pass ``loops_spmm`` — rows
+  this kernel does not visit keep the carry's values, letting the CSR and
+  BCSR kernels fill disjoint row ranges of ONE buffer with no concatenate.
 """
 from __future__ import annotations
 
@@ -33,27 +48,33 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .panel_common import first_last, panel_operands, split_panel_refs
 from .ref import acc_dtype_for
 
-__all__ = ["csr_spmm_pallas"]
+__all__ = ["csr_spmm_pallas", "csr_panels_spmm_pallas"]
 
 
-def _kernel(row_ids_ref, col_idx_ref, vals_ref, b_ref, o_ref, acc_ref):
-    k = pl.program_id(1)
-    nnz = pl.num_programs(1)
-
-    row_here = row_ids_ref[k]
-    row_prev = row_ids_ref[jnp.maximum(k - 1, 0)]
-    row_next = row_ids_ref[jnp.minimum(k + 1, nnz - 1)]
-    first = jnp.logical_or(k == 0, row_here != row_prev)
-    last = jnp.logical_or(k == nnz - 1, row_here != row_next)
+def _panel_kernel(g: int, has_carry: bool, *refs):
+    """One grid step: masked gather of G rows of B, multiply-reduce over G."""
+    rows_ref, _, vals_ref, mask_ref, b_refs, (o_ref, acc_ref) = \
+        split_panel_refs(refs, g, has_carry)
+    first, last = first_last(rows_ref)
 
     @pl.when(first)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    v = vals_ref[0, 0].astype(acc_ref.dtype)       # scalar nonzero value
-    acc_ref[...] += v * b_ref[...].astype(acc_ref.dtype)  # AXPY over N lanes
+    # Masked broadcast-multiply-reduce over the G axis: lane i contributes
+    # vals[i] * B[cols[i], :] iff mask[i] (padding lanes are dropped by the
+    # mask, so panels shorter than G — nnz not divisible by G, row
+    # boundaries — are exact, not approximate).
+    acc = acc_ref[...]
+    for i, b_ref in enumerate(b_refs):
+        v = vals_ref[0, i].astype(acc_ref.dtype)
+        contrib = v * b_ref[...].astype(acc_ref.dtype)  # AXPY over N lanes
+        acc = acc + jnp.where(mask_ref[0, i] > 0, contrib,
+                              jnp.zeros_like(contrib))
+    acc_ref[...] = acc
 
     @pl.when(last)
     def _flush():
@@ -62,44 +83,82 @@ def _kernel(row_ids_ref, col_idx_ref, vals_ref, b_ref, o_ref, acc_ref):
 
 @functools.partial(
     jax.jit,
-    static_argnames=("nrows", "bn", "out_dtype", "interpret"))
-def csr_spmm_pallas(row_ids: jax.Array, col_idx: jax.Array, vals: jax.Array,
-                    b: jax.Array, *, nrows: int, bn: int | None = None,
-                    out_dtype=None, interpret: bool = True) -> jax.Array:
-    """C[r] += vals[k] * B[col_idx[k], :] for every nonzero k (rows sorted).
+    static_argnames=("nrows", "out_rows", "bn", "out_dtype", "interpret"))
+def csr_panels_spmm_pallas(panel_rows: jax.Array, panel_cols: jax.Array,
+                           panel_vals: jax.Array, panel_mask: jax.Array,
+                           b: jax.Array, *, nrows: int,
+                           out_rows: int | None = None, bn: int | None = None,
+                           out_dtype=None, interpret: bool = True,
+                           carry: jax.Array | None = None) -> jax.Array:
+    """C[r] += sum_i mask[p,i] * vals[p,i] * B[cols[p,i], :] per panel p.
 
     Args:
-      row_ids: (nnz,) int32, nondecreasing output row per nonzero.
-      col_idx: (nnz,) int32 gather row of ``b`` per nonzero.
-      vals:    (nnz,) values.
-      b:       (K, N) dense operand.
-      nrows:   output row count (static).
-      bn:      dense-column block width; defaults to min(N, 512) — the wide
-               block is the analogue of the paper's multi-tile trick (several
-               128-lane column tiles processed per visit).
-      interpret: run the Pallas interpreter (CPU validation); False on TPU.
+      panel_rows: (P,) int32, nondecreasing output row per panel.
+      panel_cols: (P, G) int32 gather rows of ``b`` per panel lane.
+      panel_vals: (P, G) values (0 on padding lanes).
+      panel_mask: (P, G) lane validity (1 real / 0 padding), vals dtype.
+      b:          (K, N) dense operand.
+      nrows:      logical output row count this kernel writes (static).
+      out_rows:   total rows of the returned array (>= nrows; rows beyond
+                  ``nrows`` are the fused path's BCSR territory).  Defaults
+                  to ``nrows``.
+      bn:         dense-column block width; defaults to min(N, 512) — the wide
+                  block is the column-direction analogue of the paper's
+                  multi-tile trick (several 128-lane tiles per visit).
+      carry:      optional (out_rows, N) array aliased into the output; rows
+                  not visited here keep its contents (fused single-pass mode).
+      interpret:  run the Pallas interpreter (CPU validation); False on TPU.
     """
-    nnz = row_ids.shape[0]
+    npanels, g = panel_cols.shape
     n = b.shape[1]
     bn = bn or min(n, 512)
     if n % bn:
         raise ValueError(f"N={n} not divisible by bn={bn}")
-    acc_dtype = acc_dtype_for(vals.dtype)
+    acc_dtype = acc_dtype_for(panel_vals.dtype)
     out_dtype = out_dtype or acc_dtype
+    out_rows = out_rows or nrows
+    has_carry = carry is not None
+
+    def _rows(j, k, rows, cols):
+        return (rows[k], j)
+
+    in_specs, args, aliases = panel_operands(
+        g=g, bn=bn,
+        vals_spec=pl.BlockSpec((1, g), lambda j, k, rows, cols: (k, 0)),
+        vals=panel_vals, mask=panel_mask, b=b,
+        carry=carry, carry_spec=pl.BlockSpec((1, bn), _rows))
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,  # row_ids, col_idx
-        grid=(n // bn, nnz),
-        in_specs=[
-            pl.BlockSpec((1, 1), lambda j, k, rows, cols: (k, 0)),       # vals
-            pl.BlockSpec((1, bn), lambda j, k, rows, cols: (cols[k], j)),  # B row
-        ],
-        out_specs=pl.BlockSpec((1, bn), lambda j, k, rows, cols: (rows[k], j)),
+        num_scalar_prefetch=2,  # panel_rows, panel_cols
+        grid=(n // bn, npanels),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, bn), _rows),
         scratch_shapes=[pltpu.VMEM((1, bn), acc_dtype)],
     )
     return pl.pallas_call(
-        _kernel,
+        functools.partial(_panel_kernel, g, has_carry),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((nrows, n), out_dtype),
+        out_shape=jax.ShapeDtypeStruct((out_rows, n), out_dtype),
+        input_output_aliases=aliases,
         interpret=interpret,
-    )(row_ids, col_idx, vals.reshape(nnz, 1), b)
+    )(panel_rows, panel_cols, *args)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("nrows", "bn", "out_dtype", "interpret"))
+def csr_spmm_pallas(row_ids: jax.Array, col_idx: jax.Array, vals: jax.Array,
+                    b: jax.Array, *, nrows: int, bn: int | None = None,
+                    out_dtype=None, interpret: bool = True) -> jax.Array:
+    """Flat-array entry point: one nonzero per panel (G = 1).
+
+    Packing a (row, col)-sorted nonzero stream into width-1 panels is pure
+    reshaping, so this stays jit-traceable; format-level callers should
+    prefer :func:`csr_panels_spmm_pallas` with a host-packed
+    ``PanelCSR`` for real G-wide panels.
+    """
+    nnz = row_ids.shape[0]
+    return csr_panels_spmm_pallas(
+        row_ids, col_idx.reshape(nnz, 1), vals.reshape(nnz, 1),
+        jnp.ones((nnz, 1), vals.dtype), b, nrows=nrows, bn=bn,
+        out_dtype=out_dtype, interpret=interpret)

@@ -4,6 +4,13 @@
 format dataclasses (``repro.core.formats``), moves arrays to device, picks the
 execution backend (Pallas-on-TPU, Pallas-interpret on CPU for validation, or
 the pure-jnp reference), and handles precision promotion.
+
+The Pallas backends execute G-wide panels when the caller supplies them
+(``panels=``, from ``LoopsFormat.csr_panels``/``bcsr_panels``); otherwise they
+fall back to the flat G=1 layout.  ``loops_spmm_fused`` is the single-pass
+hybrid: both kernels write disjoint row ranges of one preallocated buffer via
+``input_output_aliases`` + offset index_maps, so the output is produced with
+no ``concatenate`` copy.
 """
 from __future__ import annotations
 
@@ -11,10 +18,10 @@ import jax
 import jax.numpy as jnp
 
 from . import ref
-from .bcsr_spmm import bcsr_spmm_pallas
-from .csr_spmm import csr_spmm_pallas
+from .bcsr_spmm import bcsr_panels_spmm_pallas, bcsr_spmm_pallas
+from .csr_spmm import csr_panels_spmm_pallas, csr_spmm_pallas
 
-__all__ = ["csr_spmm", "bcsr_spmm", "default_backend"]
+__all__ = ["csr_spmm", "bcsr_spmm", "loops_spmm_fused", "default_backend"]
 
 
 def default_backend() -> str:
@@ -25,36 +32,97 @@ def default_backend() -> str:
 
 
 def csr_spmm(csr, b: jax.Array, *, backend: str | None = None,
-             bn: int | None = None, out_dtype=None) -> jax.Array:
-    """SpMM of a ``repro.core.formats.CSR`` against dense ``b`` (K, N)."""
+             bn: int | None = None, out_dtype=None, panels=None) -> jax.Array:
+    """SpMM of a ``repro.core.formats.CSR`` against dense ``b`` (K, N).
+
+    ``panels`` — a ``repro.core.formats.PanelCSR`` view of the same matrix —
+    routes the Pallas backends through the G-wide panel kernel (one masked
+    G-row gather + multiply-reduce per grid step instead of one nonzero).
+    """
     backend = backend or default_backend()
-    row_ids = jnp.asarray(csr.row_ids)
-    col_idx = jnp.asarray(csr.col_idx)
-    vals = jnp.asarray(csr.vals)
     if backend == "jnp":
-        return ref.csr_spmm_ref(row_ids, col_idx, vals, b, csr.nrows,
+        return ref.csr_spmm_ref(jnp.asarray(csr.row_ids),
+                                jnp.asarray(csr.col_idx),
+                                jnp.asarray(csr.vals), b, csr.nrows,
                                 out_dtype=out_dtype)
-    return csr_spmm_pallas(row_ids, col_idx, vals, b, nrows=csr.nrows,
-                           bn=bn, out_dtype=out_dtype,
-                           interpret=(backend == "interpret"))
+    interpret = backend == "interpret"
+    if panels is not None:
+        return csr_panels_spmm_pallas(
+            jnp.asarray(panels.panel_rows), jnp.asarray(panels.panel_cols),
+            jnp.asarray(panels.panel_vals), jnp.asarray(panels.panel_mask),
+            b, nrows=csr.nrows, bn=bn, out_dtype=out_dtype,
+            interpret=interpret)
+    return csr_spmm_pallas(jnp.asarray(csr.row_ids), jnp.asarray(csr.col_idx),
+                           jnp.asarray(csr.vals), b, nrows=csr.nrows,
+                           bn=bn, out_dtype=out_dtype, interpret=interpret)
 
 
 def bcsr_spmm(bcsr, b: jax.Array, *, backend: str | None = None,
-              bn: int | None = None, out_dtype=None) -> jax.Array:
+              bn: int | None = None, out_dtype=None, panels=None) -> jax.Array:
     """SpMM of a ``repro.core.formats.VectorBCSR`` against dense ``b``.
 
     Returns the *logical* (bcsr.nrows, N) result (padding rows trimmed).
+    ``panels`` — a ``repro.core.formats.PanelBCSR`` — routes the Pallas
+    backends through the G-wide kernel (one (Br,G)@(G,bn) MXU matmul per
+    grid step instead of a rank-1 update).
     """
     backend = backend or default_backend()
-    tile_rows = jnp.asarray(bcsr.tile_rows)
-    tile_cols = jnp.asarray(bcsr.tile_cols)
-    tile_vals = jnp.asarray(bcsr.tile_vals)
     if backend == "jnp":
-        padded = ref.bcsr_spmm_ref(tile_rows, tile_cols, tile_vals, b,
+        padded = ref.bcsr_spmm_ref(jnp.asarray(bcsr.tile_rows),
+                                   jnp.asarray(bcsr.tile_cols),
+                                   jnp.asarray(bcsr.tile_vals), b,
                                    bcsr.nblocks, out_dtype=out_dtype)
+    elif panels is not None:
+        padded = bcsr_panels_spmm_pallas(
+            jnp.asarray(panels.panel_rows), jnp.asarray(panels.panel_cols),
+            jnp.asarray(panels.panel_vals), jnp.asarray(panels.panel_mask),
+            b, nblocks=panels.nblocks, bn=bn, out_dtype=out_dtype,
+            interpret=(backend == "interpret"))
     else:
-        padded = bcsr_spmm_pallas(tile_rows, tile_cols, tile_vals, b,
+        padded = bcsr_spmm_pallas(jnp.asarray(bcsr.tile_rows),
+                                  jnp.asarray(bcsr.tile_cols),
+                                  jnp.asarray(bcsr.tile_vals), b,
                                   nblocks=bcsr.nblocks, bn=bn,
                                   out_dtype=out_dtype,
                                   interpret=(backend == "interpret"))
     return padded[:bcsr.nrows]
+
+
+def loops_spmm_fused(fmt, b: jax.Array, *, backend: str | None = None,
+                     bn: int | None = None, out_dtype=None) -> jax.Array:
+    """Single-pass hybrid SpMM into ONE preallocated output.
+
+    Pass 1 (CSR panels) allocates the full ``(r_boundary + nblocks*Br, N)``
+    buffer and fills rows ``[0, r_boundary)``; pass 2 (BCSR panels) takes
+    that buffer as an aliased carry and fills the remaining blocks at
+    ``row_block_offset = r_boundary // Br`` — the pallas-level
+    ``input_output_aliases`` keeps pass 1's rows intact with zero copies.
+    No ``concatenate`` appears in the jaxpr; the only residual movement is
+    the final ``[:nrows]`` trim when the last block-row overhangs.
+
+    Requires both parts non-empty, panel views present, and ``r_boundary``
+    aligned to ``Br`` (planners guarantee the alignment; ``loops_spmm``
+    falls back to the two-output path otherwise).
+    """
+    backend = backend or default_backend()
+    if backend == "jnp":
+        raise ValueError("fused path is Pallas-only; use backend="
+                         "'interpret' or 'pallas'")
+    cp, bp = fmt.csr_panels, fmt.bcsr_panels
+    r_b, br = fmt.r_boundary, bp.br
+    if r_b % br or not 0 < r_b < fmt.nrows:
+        raise ValueError(f"fused path needs 0 < r_boundary < nrows with "
+                         f"r_boundary % Br == 0, got {r_b} (Br={br})")
+    interpret = backend == "interpret"
+    r_pad = r_b + bp.nblocks * br
+    out = csr_panels_spmm_pallas(
+        jnp.asarray(cp.panel_rows), jnp.asarray(cp.panel_cols),
+        jnp.asarray(cp.panel_vals), jnp.asarray(cp.panel_mask),
+        b, nrows=r_b, out_rows=r_pad, bn=bn, out_dtype=out_dtype,
+        interpret=interpret)
+    out = bcsr_panels_spmm_pallas(
+        jnp.asarray(bp.panel_rows), jnp.asarray(bp.panel_cols),
+        jnp.asarray(bp.panel_vals), jnp.asarray(bp.panel_mask),
+        b, nblocks=bp.nblocks, row_block_offset=r_b // br, out_rows=r_pad,
+        bn=bn, out_dtype=out_dtype, interpret=interpret, carry=out)
+    return out if r_pad == fmt.nrows else out[:fmt.nrows]

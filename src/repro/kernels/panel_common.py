@@ -1,0 +1,68 @@
+"""Shared scaffolding for the G-wide panel kernels.
+
+Both panel kernels (``csr_spmm``, ``bcsr_spmm``) speak the same operand
+protocol: scalar-prefetched ``(panel_rows, panel_cols)``, then the tensor
+train ``[panel_vals, panel_mask, carry?, B x G]``, then outputs and scratch.
+The operand ORDER is load-bearing — ``input_output_aliases`` is positional —
+so it is defined here exactly once and both kernels assemble their specs and
+unpack their refs through these helpers.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["CARRY_OPERAND_INDEX", "first_last", "panel_operands",
+           "split_panel_refs"]
+
+# Position of the fused-path carry among ALL pallas_call operands (scalar
+# prefetch included): rows(0), cols(1), vals(2), mask(3), carry(4).
+CARRY_OPERAND_INDEX = 4
+
+
+def first_last(rows_ref):
+    """(first, last) predicates for the nondecreasing-row revisit protocol:
+    does the inner grid step ``k`` open / close its output row's visit?"""
+    k = pl.program_id(1)
+    npanels = pl.num_programs(1)
+    row_here = rows_ref[k]
+    row_prev = rows_ref[jnp.maximum(k - 1, 0)]
+    row_next = rows_ref[jnp.minimum(k + 1, npanels - 1)]
+    first = jnp.logical_or(k == 0, row_here != row_prev)
+    last = jnp.logical_or(k == npanels - 1, row_here != row_next)
+    return first, last
+
+
+def split_panel_refs(refs, g: int, has_carry: bool):
+    """Unpack a panel kernel's ref train into
+    ``(rows, cols, vals, mask, b_refs, tail)`` where ``tail`` is the
+    kernel-specific (outputs + scratch) remainder.  The carry ref, when
+    present, is never read in-kernel (aliasing preserves it) and is
+    skipped here."""
+    rows_ref, cols_ref, vals_ref, mask_ref = refs[:4]
+    rest = refs[4 + (1 if has_carry else 0):]
+    return rows_ref, cols_ref, vals_ref, mask_ref, rest[:g], rest[g:]
+
+
+def panel_operands(*, g: int, bn: int, vals_spec, vals, mask, b,
+                   carry=None, carry_spec=None):
+    """Assemble the tensor-operand train shared by both panel kernels.
+
+    Returns ``(in_specs, args, input_output_aliases)``: vals and the
+    ``(1, G)`` mask, the optional aliased carry, then G independent
+    ``(1, bn)`` gathers of ``b`` indexed by the scalar-prefetched
+    ``panel_cols`` — one DMA stream per panel lane.
+    """
+    in_specs = [vals_spec,
+                pl.BlockSpec((1, g), lambda j, k, rows, cols: (k, 0))]
+    args = [vals, mask]
+    aliases = {}
+    if carry is not None:
+        in_specs.append(carry_spec)
+        args.append(carry)
+        aliases = {CARRY_OPERAND_INDEX: 0}
+    in_specs.extend(
+        pl.BlockSpec((1, bn), lambda j, k, rows, cols, i=i: (cols[k, i], j))
+        for i in range(g))
+    args.extend([b] * g)
+    return in_specs, args, aliases

@@ -42,8 +42,8 @@ def default_cache() -> PlanCache:
 
 
 def make_record(features, *, dtype, n_cols: int, backend: str, r_frac: float,
-                t_vpu: int, t_mxu: int, br: int, gflops: float = 0.0,
-                trials: int = 0) -> Dict:
+                t_vpu: int, t_mxu: int, br: int, panel_g: int = 1,
+                gflops: float = 0.0, trials: int = 0) -> Dict:
     """The one place the cache-record schema is spelled out (the distributed
     scheduler and the search path both store through here).  ``r_frac`` (not
     the absolute boundary) is stored so a plan transfers to same-bucket
@@ -55,7 +55,8 @@ def make_record(features, *, dtype, n_cols: int, backend: str, r_frac: float,
         "n_cols": int(n_cols),
         "backend": backend,
         "plan": {"r_frac": float(r_frac), "t_vpu": int(t_vpu),
-                 "t_mxu": int(t_mxu), "br": int(br)},
+                 "t_mxu": int(t_mxu), "br": int(br),
+                 "panel_g": int(panel_g)},
         "gflops": float(gflops),
         "trials": int(trials),
     }
@@ -68,7 +69,7 @@ def record_from_result(fp: Fingerprint, res: SearchResult, *, nrows: int,
         fp.features(), dtype=dtype, n_cols=n_cols, backend=backend,
         r_frac=float(res.plan.r_boundary) / max(nrows, 1),
         t_vpu=res.plan.t_vpu, t_mxu=res.plan.t_mxu, br=res.plan.br,
-        gflops=res.gflops, trials=res.measured)
+        panel_g=res.plan.panel_g, gflops=res.gflops, trials=res.measured)
 
 
 def plan_from_record(rec: Mapping, nrows: int) -> SpmmPlan:
@@ -90,7 +91,8 @@ def plan_from_record(rec: Mapping, nrows: int) -> SpmmPlan:
         r_b = nrows
     elif t_vpu == 0:                   # no vector workers -> pure BCSR
         r_b = 0
-    return SpmmPlan(r_boundary=r_b, t_vpu=t_vpu, t_mxu=t_mxu, br=br)
+    return SpmmPlan(r_boundary=r_b, t_vpu=t_vpu, t_mxu=t_mxu, br=br,
+                    panel_g=int(p.get("panel_g", 1)))
 
 
 def autotune(csr: CSR, *, n_cols: int = 32, backend: str = "jnp",
@@ -122,7 +124,8 @@ def autotune(csr: CSR, *, n_cols: int = 32, backend: str = "jnp",
             # and downstream peeks (tune_suite reporting) always resolve.
             cache.put(key, {**rec,
                             "fingerprint": [float(f) for f in fp.features()]})
-        return loops_from_csr(csr, plan.r_boundary, plan.br), plan
+        return loops_from_csr(csr, plan.r_boundary, plan.br,
+                              panel_g=plan.panel_g), plan
     res = search(csr, n_cols=n_cols, total_workers=total_workers,
                  model=model, budget=budget, backend=backend)
     cache.put(key, record_from_result(fp, res, nrows=csr.nrows, dtype=dt,

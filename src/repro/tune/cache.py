@@ -33,7 +33,10 @@ from .fingerprint import feature_distance
 __all__ = ["PlanCache", "CacheStats", "CACHE_VERSION", "default_cache_dir"]
 
 # Bump when the record schema or the fingerprint feature layout changes.
-CACHE_VERSION = 1
+# v2: plans carry ``panel_g`` (G-wide kernel panels) — v1 records predate the
+# panelized kernels and must never be replayed as-if G=1 were still the only
+# execution shape.
+CACHE_VERSION = 2
 
 
 def default_cache_dir() -> str:

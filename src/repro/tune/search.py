@@ -7,6 +7,8 @@ The plan space is the cross product the paper's pipeline exposes:
     fraction sweep (the Algorithm 1 conversion is re-run per candidate, as a
     per-shape search would on hardware);
   * ``Br ∈ {2, 4, 8}`` — tile heights (cntd/cntf/cnth analogues);
+  * ``G ∈ {1, 4, 8}`` — panel widths (Figure-2 multi-tile fmopa rounds per
+    ZA-tile visit; the kernels' grid shrinks ~G-fold, padding permitting);
   * ``(t_vpu, t_mxu)`` — worker splits with ``t_vpu + t_mxu = T``.
 
 Exhaustively *measuring* that space is what the paper avoids — its quadratic
@@ -92,6 +94,7 @@ def _r_candidates(csr: CSR, br: int, splits: Sequence[Tuple[int, int]],
 
 def enumerate_plans(csr: CSR, *, total_workers: int = 8,
                     br_choices: Sequence[int] = (2, 4, 8),
+                    g_choices: Sequence[int] = (1, 4, 8),
                     tp_vpu: float = 1.0, tp_mxu: float = 4.0
                     ) -> List[SpmmPlan]:
     """The full (deduplicated) candidate plan space."""
@@ -106,12 +109,13 @@ def enumerate_plans(csr: CSR, *, total_workers: int = 8,
                     continue
                 if r_b < csr.nrows and t_mxu == 0:
                     continue
-                key = (r_b, br, t_vpu, t_mxu)
-                if key in seen:
-                    continue
-                seen.add(key)
-                plans.append(SpmmPlan(r_boundary=r_b, t_vpu=t_vpu,
-                                      t_mxu=t_mxu, br=br))
+                for g in g_choices:
+                    key = (r_b, br, t_vpu, t_mxu, g)
+                    if key in seen:
+                        continue
+                    seen.add(key)
+                    plans.append(SpmmPlan(r_boundary=r_b, t_vpu=t_vpu,
+                                          t_mxu=t_mxu, br=br, panel_g=g))
     return plans
 
 
@@ -133,16 +137,30 @@ def measure_plan_gflops(csr: CSR, plan: SpmmPlan, b: jax.Array, *,
                         budget: SearchBudget = SearchBudget()
                         ) -> Tuple[LoopsFormat, float]:
     """Convert (Algorithm 1) under ``plan`` and time the hybrid execution."""
-    fmt = loops_from_csr(csr, plan.r_boundary, plan.br)
+    fmt = loops_from_csr(csr, plan.r_boundary, plan.br,
+                         panel_g=plan.panel_g)
     f = jax.jit(lambda bb: loops_spmm(fmt, bb, backend=backend))
     secs = _time_fn(f, b, repeats=budget.repeats, warmup=budget.warmup)
     nnz = max(fmt.nnz, 1)
     return fmt, 2.0 * nnz * b.shape[1] / secs / 1e9
 
 
+def _step_reduction_priors(csr: CSR, g_choices: Sequence[int]
+                           ) -> dict[int, float]:
+    """Structural grid-step reduction per panel width: nnz over the panel
+    count ``sum(max(ceil(c_row / g), 1))`` — the exact factor by which G-wide
+    panels shrink the kernel grid for THIS matrix (padding included), used to
+    rank the G axis before any wall-clock measurement."""
+    counts = np.diff(csr.row_ptr).astype(np.int64)
+    nnz = max(int(counts.sum()), 1)
+    return {g: nnz / max(int(np.maximum(-(-counts // g), 1).sum()), 1)
+            for g in g_choices}
+
+
 def search(csr: CSR, *, n_cols: int = 32, total_workers: int = 8,
            model: Optional[QuadraticPerfModel] = None,
            br_choices: Sequence[int] = (2, 4, 8),
+           g_choices: Sequence[int] = (1, 4, 8),
            budget: SearchBudget = SearchBudget(), backend: str = "jnp",
            b: Optional[jax.Array] = None, seed: int = 0,
            tp_vpu: float = 1.0, tp_mxu: float = 4.0,
@@ -162,30 +180,48 @@ def search(csr: CSR, *, n_cols: int = 32, total_workers: int = 8,
         b = jnp.asarray(rng.standard_normal((csr.ncols, n_cols)).astype(dt))
     model = model or prior_model(total_workers)
     plans = enumerate_plans(csr, total_workers=total_workers,
-                            br_choices=br_choices, tp_vpu=tp_vpu,
-                            tp_mxu=tp_mxu)
+                            br_choices=br_choices, g_choices=g_choices,
+                            tp_vpu=tp_vpu, tp_mxu=tp_mxu)
 
     # Warm start.  The Eq. 2 model only sees the worker split, so by itself
     # it cannot rank *conversions* (all (r_boundary, br) share a split
     # score); couple it with the balanced-time term of Eq. 1 — the bottleneck
     # pipeline's finish time for THIS boundary under THIS split — so the
     # ranking prefers boundary/split pairs that are mutually consistent and
-    # the top-k survivors span genuinely different conversions.
+    # the top-k survivors span genuinely different conversions.  The G axis
+    # is ranked by its measured panel terms when the model has them, else by
+    # the structural grid-step reduction it buys on this matrix.
     n = max(csr.nrows, 1)
+    step_prior = _step_reduction_priors(csr, g_choices)
+
+    if measure is None and backend == "jnp":
+        # The jnp reference executes the flat arrays — wall clock on it is
+        # blind to panel_g, so "measuring" the G axis would let timing noise
+        # pick the cached width.  Pin G to the structural winner (max grid-
+        # step reduction; ties prefer the narrower panel, whose padding DMA
+        # is smaller) and spend the whole measurement budget on genuinely
+        # different (r_boundary, br) conversions.
+        g_star = max(g_choices, key=lambda g: (step_prior.get(g, 0.0), -g))
+        plans = [p for p in plans if p.panel_g == g_star]
 
     def _prior(p: SpmmPlan) -> float:
         t_v = p.r_boundary / (tp_vpu * p.t_vpu) if p.r_boundary else 0.0
         t_m = (n - p.r_boundary) / (tp_mxu * p.t_mxu) \
             if p.r_boundary < n else 0.0
         bottleneck = max(t_v, t_m, 1e-12)
-        capacity = max(float(model.predict(p.t_vpu, p.t_mxu)), 1e-12)
-        return capacity * n / bottleneck
+        if model.has_panel_terms:
+            capacity = float(model.predict(p.t_vpu, p.t_mxu, p.panel_g))
+            g_scale = 1.0
+        else:
+            capacity = float(model.predict(p.t_vpu, p.t_mxu))
+            g_scale = step_prior.get(p.panel_g, 1.0)
+        return max(capacity, 1e-12) * g_scale * n / bottleneck
 
     scored = sorted(plans, key=lambda p: -_prior(p))
     survivors: List[SpmmPlan] = []
     seen_conv = set()
     for p in scored:
-        conv = (p.r_boundary, p.br)
+        conv = (p.r_boundary, p.br, p.panel_g)
         if conv in seen_conv:
             continue
         seen_conv.add(conv)

@@ -105,3 +105,161 @@ def test_out_dtype_override(rng):
                           jnp.asarray(csr.vals), b, nrows=m,
                           out_dtype=jnp.bfloat16, interpret=True)
     assert out.dtype == jnp.bfloat16
+
+
+# ---------------------------------------------------------------------------
+# G-wide panel kernels: adversarial panel shapes vs the jnp oracle
+# ---------------------------------------------------------------------------
+
+import contextlib
+
+from repro.core import loops_grid_steps, loops_spmm
+from repro.core.formats import panelize_bcsr, panelize_csr
+from repro.kernels.bcsr_spmm import bcsr_panels_spmm_pallas
+from repro.kernels.csr_spmm import csr_panels_spmm_pallas
+
+PANEL_GS = [1, 4, 8]
+PANEL_DTYPES = [(jnp.float32, 1e-5), (jnp.bfloat16, 3e-2),
+                (jnp.float64, 1e-12)]
+
+
+@contextlib.contextmanager
+def _x64_if(dtype):
+    if jnp.dtype(dtype) == jnp.float64:
+        jax.config.update("jax_enable_x64", True)
+        try:
+            yield
+        finally:
+            jax.config.update("jax_enable_x64", False)
+    else:
+        yield
+
+
+def _adversarial_cases(rng, dtype):
+    """Dense matrices whose panelizations exercise every padding edge."""
+    cases = {}
+    # nnz not divisible by G: odd-count random fill
+    a = _sparse(rng, 11, 9, 0.35, dtype)
+    cases["indivisible"] = a
+    # single-row matrix
+    cases["single_row"] = _sparse(rng, 1, 13, 0.6, dtype)
+    # one hub row spanning multiple panels (nnz >> G)
+    hub = np.zeros((5, 24))
+    hub[2, :] = rng.standard_normal(24)
+    hub[0, 3] = 1.5
+    cases["row_spans_panels"] = np.asarray(jnp.asarray(hub, dtype))
+    # many short rows: a contiguous nonzero stream would let panels span row
+    # boundaries — packing must pad at each boundary instead
+    short = np.zeros((9, 6))
+    for r in range(9):
+        short[r, r % 6] = r + 1.0
+        if r % 2:
+            short[r, (r + 3) % 6] = -1.0
+    cases["panel_at_row_boundary"] = np.asarray(jnp.asarray(short, dtype))
+    return cases
+
+
+@pytest.mark.parametrize("dtype,tol", PANEL_DTYPES)
+@pytest.mark.parametrize("g", PANEL_GS)
+def test_csr_panel_kernel_adversarial(rng, dtype, tol, g):
+    with _x64_if(dtype):
+        for name, a in _adversarial_cases(rng, dtype).items():
+            m, k = a.shape
+            b = jnp.asarray(rng.standard_normal((k, 8)), dtype)
+            csr = csr_from_dense(a)
+            p = panelize_csr(csr, g)
+            # no panel mixes rows, all rows covered, mask marks real lanes
+            assert (np.diff(p.panel_rows) >= 0).all()
+            assert set(p.panel_rows.tolist()) == set(range(m))
+            assert int(p.panel_mask.sum()) == csr.nnz
+            got = csr_panels_spmm_pallas(
+                jnp.asarray(p.panel_rows), jnp.asarray(p.panel_cols),
+                jnp.asarray(p.panel_vals), jnp.asarray(p.panel_mask), b,
+                nrows=m, interpret=True)
+            want = ref.csr_spmm_ref(jnp.asarray(csr.row_ids),
+                                    jnp.asarray(csr.col_idx),
+                                    jnp.asarray(csr.vals), b, m)
+            np.testing.assert_allclose(np.asarray(got, np.float64),
+                                       np.asarray(want, np.float64),
+                                       rtol=tol, atol=tol, err_msg=name)
+
+
+@pytest.mark.parametrize("dtype,tol", PANEL_DTYPES)
+@pytest.mark.parametrize("g", PANEL_GS)
+def test_bcsr_panel_kernel_adversarial(rng, dtype, tol, g):
+    with _x64_if(dtype):
+        for name, a in _adversarial_cases(rng, dtype).items():
+            m, k = a.shape
+            b = jnp.asarray(rng.standard_normal((k, 8)), dtype)
+            fmt = loops_from_csr(csr_from_dense(a), 0, 4, panel_g=g)
+            p = fmt.bcsr_panels
+            assert (np.diff(p.panel_rows) >= 0).all()
+            assert set(p.panel_rows.tolist()) == set(range(p.nblocks))
+            got = bcsr_panels_spmm_pallas(
+                jnp.asarray(p.panel_rows), jnp.asarray(p.panel_cols),
+                jnp.asarray(p.panel_vals), jnp.asarray(p.panel_mask), b,
+                nblocks=p.nblocks, interpret=True)
+            bc = fmt.bcsr_part
+            want = ref.bcsr_spmm_ref(jnp.asarray(bc.tile_rows),
+                                     jnp.asarray(bc.tile_cols),
+                                     jnp.asarray(bc.tile_vals), b,
+                                     bc.nblocks)
+            np.testing.assert_allclose(np.asarray(got, np.float64),
+                                       np.asarray(want, np.float64),
+                                       rtol=tol, atol=tol, err_msg=name)
+
+
+@pytest.mark.parametrize("g", PANEL_GS)
+def test_hybrid_panel_parity_nondivisible(rng, g):
+    """End-to-end hybrid at a br-aligned boundary, nnz not divisible by G:
+    the fused single-pass output must match dense exactly."""
+    m, k, n = 21, 17, 16
+    a = _sparse(rng, m, k, 0.3, jnp.float32)
+    b = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+    fmt = loops_from_csr(csr_from_dense(a), 8, 8, panel_g=g)
+    out = loops_spmm(fmt, b, backend="interpret")
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(a, np.float32) @ np.asarray(b),
+        rtol=1e-4, atol=1e-4)
+
+
+def test_fused_single_pass_no_concatenate(rng):
+    """Hybrid Pallas execution is single-pass: both kernels write disjoint
+    row ranges of one buffer; no concatenate appears anywhere in the jaxpr
+    (inner pallas jaxprs included)."""
+    a = _sparse(rng, 32, 24, 0.3, jnp.float32)
+    b = jnp.asarray(rng.standard_normal((24, 16)), jnp.float32)
+    fmt = loops_from_csr(csr_from_dense(a), 16, 8, panel_g=4)
+    jaxpr = jax.make_jaxpr(
+        lambda bb: loops_spmm(fmt, bb, backend="interpret"))(b)
+    assert "concatenate" not in str(jaxpr)
+
+
+def test_empty_matrix_returns_full_zero_block(rng):
+    """Zero nnz in both parts with nrows > 0 must yield (nrows, N) zeros,
+    not a (0, N) stub."""
+    fmt = loops_from_csr(csr_from_dense(np.zeros((7, 5), np.float32)), 0, 8)
+    assert fmt.nnz == 0 and fmt.nrows == 7
+    b = jnp.asarray(rng.standard_normal((5, 8)), jnp.float32)
+    for backend in ("interpret", "jnp"):
+        out = loops_spmm(fmt, b, backend=backend)
+        assert out.shape == (7, 8)
+        assert not np.asarray(out).any()
+
+
+def test_grid_steps_shrink_with_g(rng):
+    a = _sparse(rng, 64, 48, 0.25, jnp.float32)
+    csr = csr_from_dense(a)
+    steps = {g: loops_grid_steps(loops_from_csr(csr, 32, 8, panel_g=g), 32)
+             for g in (1, 4, 8)}
+    assert steps[8] <= steps[4] <= steps[1]
+    assert steps[1] >= 2 * steps[8]  # the Fig.2 batching pays off
+
+
+def test_default_br_named_constants():
+    from repro.core.formats import HALF_PACKED_ROWS, SUBLANE_ROWS
+    from repro.core.spmm import default_br
+    assert default_br(jnp.float32) == SUBLANE_ROWS == 8
+    assert default_br(jnp.float64) == SUBLANE_ROWS
+    assert default_br(jnp.bfloat16) == HALF_PACKED_ROWS == 16
+    assert default_br(jnp.float16) == HALF_PACKED_ROWS

@@ -146,23 +146,26 @@ def test_search_matches_exhaustive_on_tiny_space():
     search must return the exhaustive argmax."""
     csr = csr_from_dense(_dense(2, 32, 24, 0.2))
 
-    def score(plan):   # deterministic, maximised at (r_b high, br=4)
+    def score(plan):   # deterministic, maximised at (r_b high, br=4, G=8)
         return plan.r_boundary * 0.1 + (10.0 if plan.br == 4 else 0.0) \
-            + plan.t_mxu * 0.01
+            + plan.t_mxu * 0.01 + plan.panel_g * 0.001
 
     def measure(c, plan, b):
         from repro.core import loops_from_csr
-        return loops_from_csr(c, plan.r_boundary, plan.br), score(plan)
+        return loops_from_csr(c, plan.r_boundary, plan.br,
+                              panel_g=plan.panel_g), score(plan)
 
-    plans = enumerate_plans(csr, total_workers=4, br_choices=(2, 4))
+    plans = enumerate_plans(csr, total_workers=4, br_choices=(2, 4),
+                            g_choices=(1, 8))
     # budget large enough that pruning keeps every distinct conversion
-    n_convs = len({(p.r_boundary, p.br) for p in plans})
+    n_convs = len({(p.r_boundary, p.br, p.panel_g) for p in plans})
     res = search(csr, n_cols=8, total_workers=4, br_choices=(2, 4),
+                 g_choices=(1, 8),
                  budget=SearchBudget(top_k=n_convs, max_trials=n_convs),
                  measure=measure)
     best_conv = max(plans, key=score)
-    assert (res.plan.r_boundary, res.plan.br) == \
-        (best_conv.r_boundary, best_conv.br)
+    assert (res.plan.r_boundary, res.plan.br, res.plan.panel_g) == \
+        (best_conv.r_boundary, best_conv.br, best_conv.panel_g)
     assert res.gflops == pytest.approx(max(g for _, g in res.trials))
 
 
@@ -196,7 +199,8 @@ def test_search_warm_start_spans_conversions():
     search(csr, n_cols=8, total_workers=8, measure=measure)
     r_bs = {p.r_boundary for p in measured}
     assert any(0 < r < csr.nrows for r in r_bs), r_bs
-    assert len({(p.r_boundary, p.br) for p in measured}) == len(measured)
+    assert len({(p.r_boundary, p.br, p.panel_g)
+                for p in measured}) == len(measured)
 
 
 def test_plan_from_record_preserves_pure_plans():
@@ -346,6 +350,48 @@ def test_perf_model_rank_deficient_fit_is_ridge():
                         [float(x) for x in range(6)])
     assert np.isfinite(m2.coef).all()
     assert abs(float(m2.predict(0, 8))) < 1e3
+
+
+def test_perf_model_panel_terms():
+    """(x, y, g) samples fit the panel-extended model: g is ranked by its
+    own concave terms and best_allocation_g recovers the sweet spot, while
+    5-coefficient models keep ignoring g (backward compatibility)."""
+    from repro.core.perf_model import calibrate, fit_perf_model
+
+    def perf(x, y, g):  # saturating panel win, peak at g = 8
+        return 2.0 * x + 5.0 * y + 3.0 * g - 0.18 * g * g
+
+    samples = [(x, y, g) for x in range(5) for y in range(5 - x)
+               for g in (1, 4, 8)]
+    m = fit_perf_model(samples, [perf(*s) for s in samples])
+    assert m.has_panel_terms
+    assert float(m.predict(2, 2, 8)) == pytest.approx(perf(2, 2, 8), rel=1e-6)
+    x, y, g = m.best_allocation_g(8, g_choices=(1, 4, 8))
+    assert (x + y <= 8) and g == 8
+    # calibrate() crosses the representative splits with g_choices
+    m2 = calibrate(lambda x, y, g: perf(x, y, g), 8, g_choices=(1, 4, 8))
+    assert m2.has_panel_terms
+    # a plain Eq. 2 model ignores g entirely
+    flat = fit_perf_model([(x, y) for x in range(5) for y in range(5)],
+                          [2.0 * x + 5.0 * y for x in range(5)
+                           for y in range(5)])
+    assert not flat.has_panel_terms
+    assert float(flat.predict(1, 1, 8)) == float(flat.predict(1, 1, 1))
+
+
+def test_cached_plan_replays_panel_g(tmp_path):
+    """A tuned plan's panel width survives the cache round trip and drives
+    the rehydrated conversion."""
+    from repro.tune import make_record, plan_from_record
+    rec = make_record([0.0], dtype=np.float32, n_cols=8, backend="jnp",
+                      r_frac=0.5, t_vpu=4, t_mxu=4, br=8, panel_g=4)
+    plan = plan_from_record(rec, nrows=64)
+    assert plan.panel_g == 4
+    from repro.core import loops_from_csr
+    fmt = loops_from_csr(csr_from_dense(_dense(1, 64, 32, 0.2)),
+                         plan.r_boundary, plan.br, panel_g=plan.panel_g)
+    assert fmt.panel_g == 4
+    assert fmt.csr_panels.g == 4 and fmt.bcsr_panels.g == 4
 
 
 def test_shard_loops_auto_consults_cache(tmp_path):
