@@ -5,7 +5,17 @@ Trains a few hundred steps of node classification on a synthetic graph and
 verifies (a) loss decreases, (b) the LOOPS operator's gradients match the
 dense-adjacency reference (no accuracy loss, as the paper reports).
 
-Run:  PYTHONPATH=src python examples/gcn_train.py [--steps 300]
+Since the custom VJP landed, training runs on the *real* kernel path by
+default — 'pallas' on TPU, 'interpret' (the Pallas oracle) elsewhere: the
+forward pass is the fused panel kernels and the backward pass is the same
+kernels on the cached transposed format (``docs/training.md`` walks the
+dataflow).  ``--backend jnp`` keeps the pure-reference path as the gradient
+oracle; the dense adjacency appears only in the one-off parity check, never
+in the training step.
+
+Run:  PYTHONPATH=src python examples/gcn_train.py              # real kernels
+      PYTHONPATH=src python examples/gcn_train.py --backend jnp --steps 300
+      PYTHONPATH=src python examples/gcn_train.py --steps 2    # CI smoke
 """
 import argparse
 import time
@@ -15,22 +25,45 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import csr_to_dense, loops_spmm, plan_and_convert, suite
+from repro.kernels import ops
 
 F_IN, F_HID, F_OUT = 64, 64, 10
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--steps", type=int, default=300)
-    ap.add_argument("--nodes", type=int, default=2048)
-    ap.add_argument("--degree", type=int, default=8)
+    ap.add_argument("--steps", type=int, default=None,
+                    help="default 300 (jnp/pallas) / 40 (interpret: the "
+                         "sequential Pallas oracle is ~100x slower per "
+                         "nonzero, so the default problem is sized down)")
+    ap.add_argument("--nodes", type=int, default=None,
+                    help="default 2048 (jnp/pallas) / 256 (interpret)")
+    ap.add_argument("--degree", type=int, default=None,
+                    help="default 8 (jnp/pallas) / 4 (interpret)")
     ap.add_argument("--lr", type=float, default=5.0)
+    ap.add_argument("--backend", default=None,
+                    choices=["pallas", "interpret", "jnp"],
+                    help="kernel path for BOTH the forward and backward "
+                         "SpMM (default: the real kernels — 'pallas' on "
+                         "TPU, 'interpret' elsewhere; 'jnp' is the "
+                         "reference/oracle path)")
+    ap.add_argument("--skip-grad-check", action="store_true",
+                    help="skip the one-off custom-VJP vs dense-adjacency "
+                         "gradient parity check")
     ap.add_argument("--autotune", action="store_true",
                     help="plan via the measured repro.tune cache instead of "
                          "the hand-set total_workers=8 model path; the two "
                          "GCN layers (and every restart of this script with "
                          "the same graph statistics) share one cached plan")
     args = ap.parse_args()
+    backend = args.backend or ops.default_backend()
+    small = backend == "interpret"   # oracle mode: keep the default quick
+    if args.steps is None:
+        args.steps = 40 if small else 300
+    if args.nodes is None:
+        args.nodes = 256 if small else 2048
+    if args.degree is None:
+        args.degree = 4 if small else 8
 
     t0 = time.time()
     adj = suite.gcn_graph(args.nodes, args.degree, seed=0)
@@ -48,7 +81,7 @@ def main():
         fmt, plan = plan_and_convert(adj, total_workers=8)
     t_prep = time.time() - t0
     print(f"graph: {args.nodes} nodes, nnz={adj.nnz}; conversion {t_prep:.3f}s "
-          f"(r_boundary={plan.r_boundary})")
+          f"(r_boundary={plan.r_boundary}); backend={backend}")
 
     rng = np.random.default_rng(0)
     x = jnp.asarray(rng.standard_normal((args.nodes, F_IN)), jnp.float32)
@@ -62,10 +95,7 @@ def main():
               "w1": jnp.asarray(rng.standard_normal((F_HID, F_OUT)) * 0.1,
                                 jnp.float32)}
 
-    def agg(h):  # the paper's operator
-        return loops_spmm(fmt, h, backend="jnp")
-
-    def loss_fn(p):
+    def loss_fn(p, agg):
         h = jax.nn.relu(agg(x @ p["w0"]))
         logits = agg(h @ p["w1"])
         logz = jax.nn.logsumexp(logits, axis=-1)
@@ -73,9 +103,28 @@ def main():
         acc = jnp.mean((jnp.argmax(logits, -1) == y).astype(jnp.float32))
         return jnp.mean(logz - gold), acc
 
+    def agg(h):  # the paper's operator — custom VJP on the Pallas backends
+        return loops_spmm(fmt, h, backend=backend)
+
+    if not args.skip_grad_check:
+        # One-off parity: jax.grad through the LOOPS custom VJP must match
+        # the dense-adjacency reference (paper: "no accuracy loss").  The
+        # densified adjacency exists only here — the training step below
+        # never touches it.
+        dense_adj = jnp.asarray(csr_to_dense(adj))
+        g_loops = jax.grad(lambda p: loss_fn(p, agg)[0])(params)
+        g_dense = jax.grad(
+            lambda p: loss_fn(p, lambda h: dense_adj @ h)[0])(params)
+        err = max(float(jnp.abs(a - b).max())
+                  for a, b in zip(jax.tree.leaves(g_loops),
+                                  jax.tree.leaves(g_dense)))
+        assert err <= 1e-4, f"custom-VJP grads off by {err:.2e} (> 1e-4)"
+        print(f"grad check: max |loops - dense| = {err:.2e}  (<= 1e-4) OK")
+
     @jax.jit
     def step(p):
-        (loss, acc), g = jax.value_and_grad(loss_fn, has_aux=True)(p)
+        (loss, acc), g = jax.value_and_grad(
+            lambda p_: loss_fn(p_, agg), has_aux=True)(p)
         p = jax.tree.map(lambda w, gw: w - args.lr * gw, p, g)
         return p, loss, acc
 
@@ -92,8 +141,9 @@ def main():
           f"({dt / args.steps * 1e3:.1f} ms/step); "
           f"prep amortised over {t_prep / (dt / args.steps):.0f} steps "
           f"(paper: 1.3% of e2e)")
-    assert float(loss) < first * 0.7, "GCN failed to learn"
-    print("OK: loss decreased", first, "->", float(loss))
+    if args.steps >= 40:
+        assert float(loss) < first * 0.7, "GCN failed to learn"
+        print("OK: loss decreased", first, "->", float(loss))
 
 
 if __name__ == "__main__":

@@ -5,26 +5,28 @@ adaptive quadratic-performance-model scheduler, plus the distributed
 (shard_map device-group) two-level execution.
 """
 from .formats import (CSR, DEFAULT_PANEL_G, LoopsFormat, PanelBCSR, PanelCSR,
-                      VectorBCSR, bcsr_from_csr_rows, csr_from_coo,
-                      csr_from_dense, csr_to_dense, loops_from_csr,
-                      panelize_bcsr, panelize_csr)
+                      TransposedLoops, VectorBCSR, bcsr_from_csr_rows,
+                      csr_from_coo, csr_from_dense, csr_to_dense,
+                      loops_from_csr, loops_from_csr_mapped, panelize_bcsr,
+                      panelize_csr, transposed_values)
 from .partition import choose_r_boundary, regularity_boundary, row_stats
 from .perf_model import (QuadraticPerfModel, best_allocation, calibrate,
                          fit_perf_model)
-from .spmm import (SpmmPlan, loops_grid_steps, loops_spmm, plan_and_convert,
-                   spmm_csr_baseline, spmm_dense_baseline)
+from .spmm import (SpmmPlan, loops_grid_steps, loops_spmm, loops_spmm_values,
+                   plan_and_convert, spmm_csr_baseline, spmm_dense_baseline)
 from .distributed import (ShardedLoops, distributed_spmm, shard_loops,
                           shard_loops_auto)
 
 __all__ = [
     "CSR", "DEFAULT_PANEL_G", "LoopsFormat", "PanelBCSR", "PanelCSR",
-    "VectorBCSR", "bcsr_from_csr_rows", "csr_from_coo",
-    "csr_from_dense", "csr_to_dense", "loops_from_csr", "panelize_bcsr",
-    "panelize_csr", "choose_r_boundary",
+    "TransposedLoops", "VectorBCSR", "bcsr_from_csr_rows", "csr_from_coo",
+    "csr_from_dense", "csr_to_dense", "loops_from_csr",
+    "loops_from_csr_mapped", "panelize_bcsr",
+    "panelize_csr", "transposed_values", "choose_r_boundary",
     "regularity_boundary", "row_stats", "QuadraticPerfModel",
     "best_allocation", "calibrate", "fit_perf_model", "SpmmPlan",
-    "loops_grid_steps", "loops_spmm", "plan_and_convert",
-    "spmm_csr_baseline",
+    "loops_grid_steps", "loops_spmm", "loops_spmm_values",
+    "plan_and_convert", "spmm_csr_baseline",
     "spmm_dense_baseline", "ShardedLoops", "distributed_spmm", "shard_loops",
     "shard_loops_auto",
 ]

@@ -224,11 +224,45 @@ def distributed_spmm(sharded: ShardedLoops, b: jax.Array, mesh: Mesh,
     per-device row slices are concatenated with statically known offsets —
     zero inter-device communication beyond B's broadcast, the scaled-out
     version of the paper's conflict-free row ownership.
+
+    Differentiable w.r.t. ``b`` via a custom VJP: each device transposes its
+    own row shard against its exclusive slice of the cotangent
+    (``Aᵀ_shard · dY_shard``) and the partials are summed with
+    :func:`repro.dist.step.loops_cotangent_psum` — the backward dual of B's
+    replicated entry in ``loops_in_specs`` — so ``dB`` comes back replicated
+    exactly like the operand it is the gradient of.
     """
+
+    @jax.custom_vjp
+    def run_vjp(b_):
+        return _distributed_execute(sharded, b_, mesh, axis, assemble)
+
+    def run_fwd(b_):
+        return run_vjp(b_), None   # workload is static; bwd needs only dY
+
+    def run_bwd(_, dy):
+        return (_distributed_db(sharded, dy, mesh, axis,
+                                assemble).astype(b.dtype),)
+
+    run_vjp.defvjp(run_fwd, run_bwd)
+    return run_vjp(b)
+
+
+def _worker_axes(mesh: Mesh, axis):
+    """Normalise the SpMM worker ``axis`` (name or tuple of names) and
+    return ``(axes, D)`` — shared by the forward and backward shard_maps so
+    their axis handling can never diverge."""
     axes = (axis,) if isinstance(axis, str) else tuple(axis)
-    D = 1
+    d = 1
     for a in axes:
-        D *= mesh.shape[a]
+        d *= mesh.shape[a]
+    return axes, d
+
+
+def _distributed_execute(sharded: ShardedLoops, b: jax.Array, mesh: Mesh,
+                         axis, assemble: bool) -> jax.Array:
+    """The forward shard_map body of :func:`distributed_spmm`."""
+    axes, D = _worker_axes(mesh, axis)
     rows_pad, br = sharded.rows_pad, sharded.br
     nblocks_pad = (rows_pad + br - 1) // br
 
@@ -259,3 +293,60 @@ def distributed_spmm(sharded: ShardedLoops, b: jax.Array, mesh: Mesh,
     pieces = [stacked[d, :sharded.row_count[d]] for d in range(D)
               if sharded.row_count[d] > 0]
     return jnp.concatenate(pieces, axis=0)
+
+
+def _distributed_db(sharded: ShardedLoops, dy: jax.Array, mesh: Mesh,
+                    axis, assemble: bool) -> jax.Array:
+    """Backward of :func:`distributed_spmm` w.r.t. the dense operand.
+
+    Each device computes ``Aᵀ_local · dY_local`` over its exclusive row
+    shard (a scatter-by-column segment-sum — the transposed reading of the
+    two reference kernels), then the partials are psummed over the worker
+    axis (:func:`repro.dist.step.loops_cotangent_psum`).  ``dy`` arrives
+    assembled ``(M, N)`` or stacked ``(D, rows_pad, N)`` to mirror whichever
+    layout the forward produced.
+    """
+    from ..dist.step import loops_cotangent_psum   # lazy: avoids import cycle
+    axes, D = _worker_axes(mesh, axis)
+    rows_pad, br = sharded.rows_pad, sharded.br
+    nblocks_pad = (rows_pad + br - 1) // br
+    k = sharded.shape[1]
+    n = dy.shape[-1]
+    if assemble:
+        # Slice the global cotangent back into the devices' exclusive row
+        # ranges (static offsets — pure data movement, no collective).
+        slices = []
+        for d in range(D):
+            o, c = sharded.row_offset[d], sharded.row_count[d]
+            slices.append(jnp.pad(dy[o:o + c], ((0, rows_pad - c), (0, 0))))
+        dy_stacked = jnp.stack(slices)
+    else:
+        dy_stacked = dy
+
+    from jax.sharding import PartitionSpec as P
+    # workload specs as in the forward; the cotangent rides the *output*
+    # spec (row-sharded), the result comes back replicated like B was
+    in_specs = loops_in_specs(axes)[:6] + (loops_out_spec(axes),)
+
+    @partial(shard_map, mesh=mesh, in_specs=in_specs, out_specs=P())
+    def run(row_ids, col_idx, vals, tile_rows, tile_cols, tile_vals, dyl):
+        row_ids, col_idx, vals = row_ids[0], col_idx[0], vals[0]
+        tile_rows, tile_cols, tile_vals = (tile_rows[0], tile_cols[0],
+                                           tile_vals[0])
+        dyl = dyl[0]                                       # (rows_pad, N)
+        acc = ref.acc_dtype_for(vals.dtype)
+        db_c = jax.ops.segment_sum(
+            vals.astype(acc)[:, None] * dyl[row_ids].astype(acc), col_idx,
+            num_segments=k)
+        pad = nblocks_pad * br - rows_pad
+        dyb = jnp.pad(dyl, ((0, pad), (0, 0))) if pad else dyl
+        blocks = dyb.reshape(nblocks_pad, br, n).astype(acc)
+        contrib = jnp.einsum("tb,tbn->tn", tile_vals.astype(acc),
+                             blocks[tile_rows])
+        db_b = jax.ops.segment_sum(contrib, tile_cols, num_segments=k)
+        return loops_cotangent_psum(db_c + db_b, axes)
+
+    return run(jnp.asarray(sharded.row_ids), jnp.asarray(sharded.col_idx),
+               jnp.asarray(sharded.vals), jnp.asarray(sharded.tile_rows),
+               jnp.asarray(sharded.tile_cols),
+               jnp.asarray(sharded.tile_vals), dy_stacked)

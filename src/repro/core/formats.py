@@ -35,6 +35,7 @@ __all__ = [
     "PanelCSR",
     "PanelBCSR",
     "LoopsFormat",
+    "TransposedLoops",
     "csr_from_dense",
     "csr_to_dense",
     "csr_slice_rows",
@@ -42,6 +43,8 @@ __all__ = [
     "panelize_csr",
     "panelize_bcsr",
     "loops_from_csr",
+    "loops_from_csr_mapped",
+    "transposed_values",
     "SUBLANE_ROWS",
     "HALF_PACKED_ROWS",
     "DEFAULT_PANEL_G",
@@ -148,6 +151,8 @@ class PanelCSR:
     panel_cols: np.ndarray  # (P, G) int32 gather rows of B (0 where padded)
     panel_vals: np.ndarray  # (P, G) values (0 where padded)
     panel_mask: np.ndarray  # (P, G) validity, same dtype as vals (1 / 0)
+    src_panel: np.ndarray   # (nnz,) int32 panel of flat nonzero k
+    src_lane: np.ndarray    # (nnz,) int32 lane of flat nonzero k
     g: int
     nrows: int
     shape: Tuple[int, int]
@@ -160,6 +165,24 @@ class PanelCSR:
         return dataclasses.replace(self,
                                    panel_vals=self.panel_vals.astype(dtype),
                                    panel_mask=self.panel_mask.astype(dtype))
+
+    def scatter_values(self, vals):
+        """Traced flat ``(nnz,)`` values -> the ``(P, G)`` panel layout.
+
+        The scatter indices are static, so this stays a single XLA scatter;
+        padding lanes (no source nonzero) remain exactly zero.  Used by the
+        autodiff path to execute the Pallas panel kernels with *live* (traced)
+        values instead of the host-packed constants.
+        """
+        import jax.numpy as jnp
+        out = jnp.zeros(self.panel_vals.shape, vals.dtype)
+        return out.at[self.src_panel, self.src_lane].set(vals)
+
+    def gather_values(self, panel_arr):
+        """Inverse of :meth:`scatter_values`: ``(P, G)`` -> flat ``(nnz,)``
+        (padding lanes dropped).  Used to read per-nonzero gradients out of
+        the SDD kernel's panel-layout output."""
+        return panel_arr[self.src_panel, self.src_lane]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -179,6 +202,8 @@ class PanelBCSR:
     panel_cols: np.ndarray  # (P, G) int32 gather rows of B (0 where padded)
     panel_vals: np.ndarray  # (P, Br, G) tile values (zero columns = padding)
     panel_mask: np.ndarray  # (P, G) validity, same dtype as vals (1 / 0)
+    src_panel: np.ndarray   # (ntiles,) int32 panel of tile t
+    src_lane: np.ndarray    # (ntiles,) int32 lane of tile t
     g: int
     br: int
     nblocks: int
@@ -193,6 +218,20 @@ class PanelBCSR:
         return dataclasses.replace(self,
                                    panel_vals=self.panel_vals.astype(dtype),
                                    panel_mask=self.panel_mask.astype(dtype))
+
+    def scatter_values(self, tile_vals):
+        """Traced ``(ntiles, Br)`` tile values -> the ``(P, Br, G)`` panel
+        layout (static scatter indices; padding columns stay zero)."""
+        import jax.numpy as jnp
+        p, br, g = self.panel_vals.shape
+        out = jnp.zeros((p, g, br), tile_vals.dtype)
+        out = out.at[self.src_panel, self.src_lane].set(tile_vals)
+        return out.transpose(0, 2, 1)
+
+    def gather_values(self, panel_arr):
+        """Inverse of :meth:`scatter_values`: ``(P, Br, G)`` panel-layout
+        data -> ``(ntiles, Br)`` (padding columns dropped)."""
+        return panel_arr[self.src_panel, :, self.src_lane]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -242,6 +281,30 @@ class LoopsFormat:
         return dataclasses.replace(
             self, csr_part=self.csr_part.astype(dtype),
             bcsr_part=self.bcsr_part.astype(dtype))
+
+    def transposed(self, *, plan=None, tuner=None,
+                   total_workers: int = 8) -> "TransposedLoops":
+        """Aᵀ as a LOOPS format plus the value-linear maps from A's stored
+        values — the backward-pass operand of the custom VJP (``dB = Aᵀ·dY``
+        runs through the same panel kernels, just on this format).
+
+        ``plan`` pins the transposed execution plan (a
+        :class:`repro.core.spmm.SpmmPlan`); otherwise it is resolved through
+        ``tuner`` (the measured plan cache) or the model-only
+        ``plan_and_convert`` with ``total_workers``.  The result is cached on
+        this instance per ``(plan, tuner, total_workers)``, so repeated
+        backward passes — every training step — pay the O(nnz) transpose
+        conversion exactly once.
+        """
+        key = (plan, id(tuner) if tuner is not None else None, total_workers)
+        cache = self.__dict__.setdefault("_transposed_cache", {})
+        if key not in cache:
+            # The entry pins the tuner: id() is only a safe key while the
+            # object is alive (a freed address can be recycled by a new
+            # tuner, which must not hit this entry).
+            cache[key] = (tuner, _build_transposed(
+                self, plan=plan, tuner=tuner, total_workers=total_workers))
+        return cache[key][1]
 
 
 # ---------------------------------------------------------------------------
@@ -336,16 +399,28 @@ def csr_slice_rows(csr: CSR, start: int, stop: int) -> CSR:
 # Vector-wise BCSR construction (paper Alg. 1 Step 2, with B_c = 1)
 # ---------------------------------------------------------------------------
 
-def bcsr_from_csr_rows(csr: CSR, start: int, stop: int, br: int) -> VectorBCSR:
+def bcsr_from_csr_rows(csr: CSR, start: int, stop: int, br: int, *,
+                       keep_zeros: bool = False, return_map: bool = False):
     """Re-tile rows [start, stop) of ``csr`` into ``br x 1`` tiles.
 
     Mirrors Algorithm 1's tile-map construction: each nonzero (i, j) lands in
     tile ``(i // br, j)`` at intra-tile offset ``i % br``.  Tiles are emitted
     sorted by (block_row, col); every block-row gets >= 1 tile.
+
+    ``keep_zeros`` keeps zero-*valued* stored entries as tile coordinates
+    instead of dropping them — required when the structure must be a function
+    of the sparsity pattern only, never the values (the autodiff transpose:
+    a trainable entry that happens to be zero at conversion time must not
+    lose its slot).  ``return_map`` additionally returns ``slot_map``, an
+    int64 array over the sliced entries where ``slot_map[k]`` is the flat
+    destination ``tile_index * br + offset`` of entry ``row_ptr[start] + k``
+    (−1 for dropped entries) — the static scatter that carries *traced*
+    values into the tile layout.
     """
     nrows = stop - start
     nblocks = max((nrows + br - 1) // br, 1)
     tile_map = {}
+    entry_dest = []  # (tr, j, off) per sliced entry, or None when dropped
     for i in range(start, stop):
         local = i - start
         tr = local // br
@@ -353,7 +428,8 @@ def bcsr_from_csr_rows(csr: CSR, start: int, stop: int, br: int) -> VectorBCSR:
         for k in range(int(csr.row_ptr[i]), int(csr.row_ptr[i + 1])):
             j = int(csr.col_idx[k])
             v = csr.vals[k]
-            if v == 0:
+            if v == 0 and not keep_zeros:
+                entry_dest.append(None)
                 continue  # drop structural pads from the parent CSR
             key = (tr, j)
             tile = tile_map.get(key)
@@ -361,6 +437,7 @@ def bcsr_from_csr_rows(csr: CSR, start: int, stop: int, br: int) -> VectorBCSR:
                 tile = np.zeros(br, csr.vals.dtype)
                 tile_map[key] = tile
             tile[off] += v
+            entry_dest.append((tr, j, off))
 
     # Ensure every block-row is visited at least once.
     present = {tr for tr, _ in tile_map}
@@ -377,9 +454,16 @@ def bcsr_from_csr_rows(csr: CSR, start: int, stop: int, br: int) -> VectorBCSR:
     counts = np.bincount(tile_rows, minlength=nblocks)
     block_ptr = np.zeros(nblocks + 1, np.int32)
     np.cumsum(counts, out=block_ptr[1:])
-    return VectorBCSR(tile_rows=tile_rows, tile_cols=tile_cols,
+    bcsr = VectorBCSR(tile_rows=tile_rows, tile_cols=tile_cols,
                       tile_vals=tile_vals, block_ptr=block_ptr, br=br,
                       nrows=nrows, shape=(nrows, csr.shape[1]))
+    if not return_map:
+        return bcsr
+    tile_of = {k: t for t, k in enumerate(keys)}
+    slot_map = np.fromiter(
+        (-1 if d is None else tile_of[(d[0], d[1])] * br + d[2]
+         for d in entry_dest), np.int64, len(entry_dest))
+    return bcsr, slot_map
 
 
 # ---------------------------------------------------------------------------
@@ -426,7 +510,9 @@ def panelize_csr(csr: CSR, g: int) -> PanelCSR:
     vals[pnl, lane] = csr.vals
     mask[pnl, lane] = 1
     return PanelCSR(panel_rows=panel_rows, panel_cols=cols, panel_vals=vals,
-                    panel_mask=mask, g=g, nrows=csr.nrows, shape=csr.shape)
+                    panel_mask=mask, src_panel=pnl.astype(np.int32),
+                    src_lane=lane.astype(np.int32), g=g, nrows=csr.nrows,
+                    shape=csr.shape)
 
 
 def panelize_bcsr(bcsr: VectorBCSR, g: int) -> PanelBCSR:
@@ -449,8 +535,9 @@ def panelize_bcsr(bcsr: VectorBCSR, g: int) -> PanelBCSR:
     vals[pnl, lane] = bcsr.tile_vals
     return PanelBCSR(panel_rows=panel_rows, panel_cols=cols,
                      panel_vals=np.ascontiguousarray(vals.transpose(0, 2, 1)),
-                     panel_mask=mask, g=g, br=bcsr.br, nblocks=bcsr.nblocks,
-                     nrows=bcsr.nrows, shape=bcsr.shape)
+                     panel_mask=mask, src_panel=pnl.astype(np.int32),
+                     src_lane=lane.astype(np.int32), g=g, br=bcsr.br,
+                     nblocks=bcsr.nblocks, nrows=bcsr.nrows, shape=bcsr.shape)
 
 
 # ---------------------------------------------------------------------------
@@ -500,3 +587,154 @@ def loops_from_csr_sorted(csr: CSR, r_boundary: int, br: int,
     order = np.argsort(-np.diff(csr.row_ptr), kind="stable").astype(np.int64)
     return loops_from_csr(permute_rows(csr, order), r_boundary, br,
                           panel_g=panel_g), order
+
+
+# ---------------------------------------------------------------------------
+# Transposed format (autodiff: dB = Aᵀ · dY through the same kernels)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TransposedLoops:
+    """Aᵀ in LOOPS form plus the *value-linear* maps from A's stored values.
+
+    The structure is a function of A's sparsity pattern only; the maps are
+    static index arrays, so the transposed value arrays can be rebuilt from
+    **traced** values (learned-sparse-weight layers) with two XLA scatters —
+    see :func:`transposed_values`.  A's "flat value vector" is
+    ``concat(csr_part.vals, bcsr_part.tile_vals.ravel())``; BCSR tile slots
+    on padding rows (``row >= nrows``) are excluded (the forward pass trims
+    those rows, so they carry no gradient and contribute nothing to Aᵀ).
+    """
+
+    fmt: LoopsFormat        # Aᵀ, converted under the resolved plan
+    plan: object            # the SpmmPlan the conversion used
+    entry_src: np.ndarray   # (E,) int64 — index into A's flat value vector
+    entry_slot: np.ndarray  # (E,) int64 — destination slot in Aᵀ's CSR
+    n_slots: int            # stored entries of Aᵀ (incl. empty-row pads)
+    csr_len: int            # slots [0, csr_len) are fmt.csr_part.vals
+    bcsr_slot: np.ndarray   # (n_slots - csr_len,) int64 flat tile*Br+off
+
+
+def loops_from_csr_mapped(csr: CSR, r_boundary: int, br: int,
+                          panel_g: int = DEFAULT_PANEL_G
+                          ) -> Tuple[LoopsFormat, int, np.ndarray]:
+    """Algorithm 1 with value-slot bookkeeping (autodiff transpose variant).
+
+    Like :func:`loops_from_csr` but the BCSR part keeps zero-valued stored
+    entries (structure must not depend on values) and the return carries the
+    maps from ``csr``'s flat value order into the two parts:
+    ``(fmt, csr_len, bcsr_slot)`` where entries ``[0, csr_len)`` become
+    ``fmt.csr_part.vals`` verbatim and entry ``csr_len + j`` lands at flat
+    tile slot ``bcsr_slot[j]``.  Requires ``csr`` to have no empty rows
+    (the transposed-CSR builder guarantees this via explicit pad slots).
+    """
+    if not 0 <= r_boundary <= csr.nrows:
+        raise ValueError(f"r_boundary {r_boundary} out of range "
+                         f"[0, {csr.nrows}]")
+    csr_part = csr_slice_rows(csr, 0, r_boundary)
+    csr_len = int(csr.row_ptr[r_boundary])
+    if csr_part.nnz != csr_len:
+        raise ValueError("loops_from_csr_mapped needs a CSR with no empty "
+                         "rows (slicing inserted pad entries)")
+    bcsr_part, bcsr_slot = bcsr_from_csr_rows(
+        csr, r_boundary, csr.nrows, br, keep_zeros=True, return_map=True)
+    fmt = LoopsFormat(csr_part=csr_part, bcsr_part=bcsr_part,
+                      r_boundary=r_boundary, shape=csr.shape,
+                      panel_g=panel_g)
+    return fmt, csr_len, bcsr_slot
+
+
+def _transposed_csr(fmt: LoopsFormat) -> Tuple[CSR, np.ndarray, np.ndarray]:
+    """Aᵀ as a (row, col)-sorted CSR with *every* row populated, plus the
+    entry maps ``(csr_t, entry_src, entry_slot)``: A's flat stored entry
+    ``entry_src[e]`` contributes (additively — duplicate coordinates
+    coalesce) to ``csr_t.vals[entry_slot[e]]``.  Empty rows of Aᵀ get an
+    explicit zero pad at column 0 with no source entry.
+    """
+    csr, bc = fmt.csr_part, fmt.bcsr_part
+    m, k = fmt.shape
+    t, br = bc.tile_vals.shape
+    # Global (row, col) coordinate of every flat stored value of A.
+    rows = np.concatenate([
+        csr.row_ids.astype(np.int64),
+        fmt.r_boundary + np.repeat(bc.tile_rows.astype(np.int64), br) * br
+        + np.tile(np.arange(br, dtype=np.int64), t)])
+    cols = np.concatenate([csr.col_idx.astype(np.int64),
+                           np.repeat(bc.tile_cols.astype(np.int64), br)])
+    keep = rows < m          # BCSR padding rows never reach the output
+    entry_src = np.nonzero(keep)[0].astype(np.int64)
+    # Transposed coordinate, linearised in Aᵀ's (row, col) = (col, row) order.
+    lin = cols[keep] * m + rows[keep]
+    uniq, inv = np.unique(lin, return_inverse=True)
+    missing = np.setdiff1d(np.arange(k, dtype=np.int64),
+                           np.unique(uniq // m))
+    all_lin = np.sort(np.concatenate([uniq, missing * m]))
+    entry_slot = np.searchsorted(all_lin, uniq)[inv].astype(np.int64)
+    rows_t = (all_lin // m).astype(np.int32)
+    cols_t = (all_lin % m).astype(np.int32)
+    flat_vals = np.concatenate([np.asarray(csr.vals).ravel(),
+                                np.asarray(bc.tile_vals).ravel()])
+    vals_t = np.zeros(len(all_lin), flat_vals.dtype)
+    np.add.at(vals_t, entry_slot, flat_vals[entry_src])
+    row_ptr = np.zeros(k + 1, np.int32)
+    np.cumsum(np.bincount(rows_t, minlength=k), out=row_ptr[1:])
+    csr_t = CSR(row_ptr=row_ptr, col_idx=cols_t, vals=vals_t,
+                row_ids=rows_t, shape=(k, m))
+    return csr_t, entry_src, entry_slot
+
+
+def _build_transposed(fmt: LoopsFormat, *, plan=None, tuner=None,
+                      total_workers: int = 8) -> TransposedLoops:
+    """Materialise :class:`TransposedLoops` (cached by
+    ``LoopsFormat.transposed``).  Plan resolution goes through the same
+    front door as the forward format — ``plan_and_convert`` / the tuner —
+    so the backward SpMM is scheduled for Aᵀ's own row statistics, not A's.
+    """
+    from .spmm import plan_and_convert  # lazy: formats <- spmm at import time
+    csr_t, entry_src, entry_slot = _transposed_csr(fmt)
+    if plan is None:
+        _, plan = plan_and_convert(csr_t, total_workers=total_workers,
+                                   panel_g=fmt.panel_g or None, tuner=tuner)
+    fmt_t, csr_len, bcsr_slot = loops_from_csr_mapped(
+        csr_t, plan.r_boundary, plan.br, panel_g=plan.panel_g)
+    tl = TransposedLoops(fmt=fmt_t, plan=plan, entry_src=entry_src,
+                         entry_slot=entry_slot, n_slots=csr_t.nnz,
+                         csr_len=csr_len, bcsr_slot=bcsr_slot)
+    # Static round-trip check: injecting A's own values must reproduce the
+    # converted parts exactly (catches any map/structure drift at build
+    # time, where it is cheap, instead of as a silent wrong gradient).
+    # Pure numpy — this runs under jit *tracing* of the backward pass, where
+    # any jnp op would be staged into the jaxpr instead of executed.
+    flat = np.concatenate([np.asarray(fmt.csr_part.vals).ravel(),
+                           np.asarray(fmt.bcsr_part.tile_vals).ravel()])
+    vals_t = np.zeros(tl.n_slots, flat.dtype)
+    np.add.at(vals_t, tl.entry_slot, flat[tl.entry_src])
+    nt, brr = fmt_t.bcsr_part.tile_vals.shape
+    tile_flat = np.zeros(nt * brr, flat.dtype)
+    np.add.at(tile_flat, tl.bcsr_slot, vals_t[tl.csr_len:])
+    if not (np.allclose(vals_t[:tl.csr_len].astype(np.float64),
+                        np.asarray(fmt_t.csr_part.vals, np.float64))
+            and np.allclose(tile_flat.reshape(nt, brr).astype(np.float64),
+                            np.asarray(fmt_t.bcsr_part.tile_vals,
+                                       np.float64))):
+        raise AssertionError("transposed value maps disagree with the "
+                             "converted transposed format")
+    return tl
+
+
+def transposed_values(tl: TransposedLoops, csr_vals, bcsr_vals):
+    """Carry (possibly traced) values of A into the transposed layout.
+
+    Returns ``(csr_vals_t, bcsr_tile_vals_t)`` matching
+    ``tl.fmt.csr_part`` / ``tl.fmt.bcsr_part`` — two static-index scatters,
+    linear in the inputs, so gradients flow through them natively.
+    """
+    import jax.numpy as jnp
+    flat = jnp.concatenate([jnp.reshape(csr_vals, (-1,)),
+                            jnp.reshape(bcsr_vals, (-1,))])
+    vals_t = jnp.zeros((tl.n_slots,), flat.dtype)
+    vals_t = vals_t.at[tl.entry_slot].add(flat[tl.entry_src])
+    nt, br = tl.fmt.bcsr_part.tile_vals.shape
+    tile_flat = jnp.zeros((nt * br,), flat.dtype)
+    tile_flat = tile_flat.at[tl.bcsr_slot].add(vals_t[tl.csr_len:])
+    return vals_t[:tl.csr_len], tile_flat.reshape(nt, br)

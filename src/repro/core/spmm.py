@@ -7,6 +7,12 @@ output rows are exclusive so no atomics are needed, paper §3.4).
 ``plan_and_convert`` is the front half of the pipeline: calibrate/query the
 quadratic performance model, solve Eq. 1 for ``r_boundary``, and run
 Algorithm 1.
+
+Both execution entry points (``loops_spmm`` for static matrices,
+``loops_spmm_values`` for trainable stored values) are differentiable on
+the Pallas backends via ``jax.custom_vjp`` — ``dB = Aᵀ·dY`` through the
+same kernels on the cached transposed format, ``dA``-at-nonzeros through
+the SDD kernels; see ``docs/training.md``.
 """
 from __future__ import annotations
 
@@ -23,8 +29,9 @@ from .formats import (CSR, DEFAULT_PANEL_G, HALF_PACKED_ROWS, LoopsFormat,
                       SUBLANE_ROWS, loops_from_csr)
 from .perf_model import QuadraticPerfModel
 
-__all__ = ["loops_spmm", "loops_grid_steps", "plan_and_convert", "SpmmPlan",
-           "spmm_csr_baseline", "spmm_dense_baseline"]
+__all__ = ["loops_spmm", "loops_spmm_values", "loops_grid_steps",
+           "plan_and_convert", "SpmmPlan", "spmm_csr_baseline",
+           "spmm_dense_baseline"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -84,8 +91,59 @@ def plan_and_convert(csr: CSR, *, total_workers: int = 8,
         r_boundary=r_b, t_vpu=t_vpu, t_mxu=t_mxu, br=br, panel_g=panel_g)
 
 
+def _loops_execute(fmt: LoopsFormat, b: jax.Array, backend: str, bn,
+                   out_dtype, csr_vals=None, bcsr_vals=None) -> jax.Array:
+    """Backend dispatch for one hybrid SpMM (no differentiation rule).
+
+    ``csr_vals``/``bcsr_vals`` optionally substitute traced live values for
+    the format's host-packed constants (learned-sparse-weight layers and the
+    transposed backward pass both need this); the structure stays static.
+    """
+    has_csr = fmt.r_boundary > 0
+    has_bcsr = fmt.r_boundary < fmt.nrows
+    pallas = backend != "jnp"   # panel views only materialise for Pallas
+    if (has_csr and has_bcsr and pallas
+            and fmt.r_boundary % fmt.bcsr_part.br == 0):
+        return ops.loops_spmm_fused(fmt, b, backend=backend, bn=bn,
+                                    out_dtype=out_dtype, csr_vals=csr_vals,
+                                    bcsr_vals=bcsr_vals)
+    parts = []
+    if has_csr:
+        parts.append(ops.csr_spmm(fmt.csr_part, b, backend=backend, bn=bn,
+                                  out_dtype=out_dtype,
+                                  panels=fmt.csr_panels if pallas else None,
+                                  vals=csr_vals))
+    if has_bcsr:
+        parts.append(ops.bcsr_spmm(fmt.bcsr_part, b, backend=backend, bn=bn,
+                                   out_dtype=out_dtype,
+                                   panels=fmt.bcsr_panels if pallas
+                                   else None,
+                                   vals=bcsr_vals))
+    if not parts:
+        return jnp.zeros((fmt.nrows, b.shape[1]), out_dtype)
+    return parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=0)
+
+
+def _backward_db(fmt: LoopsFormat, dy: jax.Array, backend: str, bn,
+                 transpose_plan, csr_vals=None, bcsr_vals=None) -> jax.Array:
+    """``dB = Aᵀ · dY`` through the same panel kernels on the (cached)
+    transposed format.  The cotangent is cast to the format's value dtype
+    first — the backward matmuls honour the forward kernels' precision
+    contract (bf16 operands, fp32 accumulation) instead of silently running
+    a wider product."""
+    from .formats import transposed_values
+    tl = fmt.transposed(plan=transpose_plan)
+    dy = dy.astype(tl.fmt.csr_part.vals.dtype)
+    cv = bv = None
+    if csr_vals is not None:
+        cv, bv = transposed_values(tl, csr_vals, bcsr_vals)
+    return _loops_execute(tl.fmt, dy, backend, bn, None,
+                          csr_vals=cv, bcsr_vals=bv)
+
+
 def loops_spmm(fmt: LoopsFormat, b: jax.Array, *, backend: str | None = None,
-               bn: int | None = None, out_dtype=None) -> jax.Array:
+               bn: int | None = None, out_dtype=None,
+               transpose_plan: "SpmmPlan | None" = None) -> jax.Array:
     """Execute the hybrid SpMM: C = A @ B with A in LOOPS format.
 
     The CSR-part rows land in C[:r_boundary], the BCSR-part rows in
@@ -98,6 +156,16 @@ def loops_spmm(fmt: LoopsFormat, b: jax.Array, *, backend: str | None = None,
     index_maps, so no ``concatenate`` copy appears in the jaxpr.  The
     two-output + concatenate fallback remains for the jnp reference and for
     boundaries not aligned to the tile height.
+
+    Differentiable end-to-end: on the Pallas backends a ``jax.custom_vjp``
+    computes ``dB = Aᵀ · dY`` through the *same* panel kernels on a lazily
+    materialised, cached transposed format (``fmt.transposed()``);
+    ``transpose_plan`` pins that format's execution plan (otherwise it is
+    resolved by ``plan_and_convert`` on Aᵀ's own row statistics).  The jnp
+    reference differentiates natively and stays the gradient oracle.  A's
+    values are compile-time constants here — for trainable values use
+    :func:`loops_spmm_values`.  (Reverse mode only; the VJP itself is not
+    further differentiable.)
     """
     backend = backend or ops.default_backend()
     out_dtype = out_dtype or ref.acc_dtype_for(
@@ -107,26 +175,73 @@ def loops_spmm(fmt: LoopsFormat, b: jax.Array, *, backend: str | None = None,
         # product is identically zero — including the nrows > 0 case, which
         # must yield a full (nrows, N) block, not a (0, N) stub.
         return jnp.zeros((fmt.nrows, b.shape[1]), out_dtype)
-    has_csr = fmt.r_boundary > 0
-    has_bcsr = fmt.r_boundary < fmt.nrows
-    pallas = backend != "jnp"   # panel views only materialise for Pallas
-    if (has_csr and has_bcsr and pallas
-            and fmt.r_boundary % fmt.bcsr_part.br == 0):
-        return ops.loops_spmm_fused(fmt, b, backend=backend, bn=bn,
-                                    out_dtype=out_dtype)
-    parts = []
-    if has_csr:
-        parts.append(ops.csr_spmm(fmt.csr_part, b, backend=backend, bn=bn,
-                                  out_dtype=out_dtype,
-                                  panels=fmt.csr_panels if pallas else None))
-    if has_bcsr:
-        parts.append(ops.bcsr_spmm(fmt.bcsr_part, b, backend=backend, bn=bn,
-                                   out_dtype=out_dtype,
-                                   panels=fmt.bcsr_panels if pallas
-                                   else None))
-    if not parts:
-        return jnp.zeros((fmt.nrows, b.shape[1]), out_dtype)
-    return parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=0)
+    if backend == "jnp":
+        return _loops_execute(fmt, b, backend, bn, out_dtype)
+
+    @jax.custom_vjp
+    def run(b_):
+        return _loops_execute(fmt, b_, backend, bn, out_dtype)
+
+    def run_fwd(b_):
+        return run(b_), None   # A is static: dB needs only the cotangent
+
+    def run_bwd(_, dy):
+        db = _backward_db(fmt, dy, backend, bn, transpose_plan)
+        return (db.astype(b.dtype),)
+
+    run.defvjp(run_fwd, run_bwd)
+    return run(b)
+
+
+def loops_spmm_values(fmt: LoopsFormat, csr_vals: jax.Array,
+                      bcsr_vals: jax.Array, b: jax.Array, *,
+                      backend: str | None = None, bn: int | None = None,
+                      out_dtype=None,
+                      transpose_plan: "SpmmPlan | None" = None) -> jax.Array:
+    """Hybrid SpMM with *trainable* stored values: C = A(vals) @ B.
+
+    ``csr_vals`` (nnz,) and ``bcsr_vals`` (ntiles, Br) are live (traced)
+    pytree leaves laid out exactly like ``fmt.csr_part.vals`` /
+    ``fmt.bcsr_part.tile_vals``; the structure in ``fmt`` stays static.
+    This is the learned-sparse-weight entry point
+    (:mod:`repro.models.sparse_ffn`).
+
+    On the Pallas backends a ``jax.custom_vjp`` supplies all three
+    cotangents:
+
+      * ``dB = Aᵀ · dY`` — the same panel kernels on the cached transposed
+        format, with the live values carried across by the static
+        value-linear maps (:func:`repro.core.formats.transposed_values`);
+      * ``dA`` at stored coordinates — the sampled dense-dense kernels
+        (:func:`repro.kernels.ops.loops_sdd`), never materialising
+        ``dY @ Bᵀ``.
+
+    The jnp reference differentiates natively (gradient oracle).
+    """
+    backend = backend or ops.default_backend()
+    out_dtype = out_dtype or ref.acc_dtype_for(jnp.dtype(csr_vals.dtype))
+    if backend == "jnp":
+        return _loops_execute(fmt, b, backend, bn, out_dtype,
+                              csr_vals=csr_vals, bcsr_vals=bcsr_vals)
+
+    @jax.custom_vjp
+    def run(cv, bv, b_):
+        return _loops_execute(fmt, b_, backend, bn, out_dtype,
+                              csr_vals=cv, bcsr_vals=bv)
+
+    def run_fwd(cv, bv, b_):
+        return run(cv, bv, b_), (cv, bv, b_)
+
+    def run_bwd(res, dy):
+        cv, bv, b_ = res
+        db = _backward_db(fmt, dy, backend, bn, transpose_plan,
+                          csr_vals=cv, bcsr_vals=bv)
+        d_cv, d_bv = ops.loops_sdd(fmt, dy, b_, backend=backend, bn=bn)
+        return (d_cv.astype(cv.dtype), d_bv.astype(bv.dtype),
+                db.astype(b_.dtype))
+
+    run.defvjp(run_fwd, run_bwd)
+    return run(csr_vals, bcsr_vals, b)
 
 
 def loops_grid_steps(fmt: LoopsFormat, n_cols: int,

@@ -43,7 +43,7 @@ from ..optim.adamw import OptConfig
 from . import sharding as shr
 
 __all__ = ["StepBundle", "default_microbatches", "build_train_step",
-           "build_prefill", "build_serve_step"]
+           "build_prefill", "build_serve_step", "loops_cotangent_psum"]
 
 F32 = jnp.float32
 
@@ -63,6 +63,26 @@ class StepBundle:
     opt_spec: Any              # PartitionSpec tree for optimizer state
     batch_spec: Any            # PartitionSpec tree for the global batch
     n_microbatches: int
+
+
+def loops_cotangent_psum(partial_db: jax.Array, axis) -> jax.Array:
+    """Row-shard-aware reduction of the dense-operand cotangent of a
+    distributed LOOPS SpMM.
+
+    Forward, ``B`` enters the ``shard_map`` replicated
+    (:func:`repro.dist.sharding.loops_in_specs`'s trailing ``P()``) while
+    the workload is row-sharded over the SpMM worker axis.  The transpose of
+    "replicate, then use on every shard" is "sum the per-shard cotangents":
+    each device owns an exclusive row slice of ``dY`` (paper §3.4 row
+    exclusivity), computes its partial ``Aᵀ_shard · dY_shard``, and this
+    psum over the worker axis produces the full ``dB`` — replicated again,
+    matching B's forward spec, so the gradient of a replicated operand never
+    leaves the mesh in a mixed layout.  ``axis`` is a mesh axis name or a
+    tuple of names (the flattened-pod spelling accepted everywhere else in
+    :mod:`repro.dist.sharding`).
+    """
+    axes = (axis,) if isinstance(axis, str) else tuple(axis)
+    return jax.lax.psum(partial_db, axes)
 
 
 def default_microbatches(shape: ShapeConfig, mesh: Mesh,

@@ -2,10 +2,12 @@
 
 ``csr_spmm``  — VPU row-wise AXPY kernel (paper's NEON kernel).
 ``bcsr_spmm`` — MXU outer-product-chain kernel (paper's SME fmopa kernel).
+``spmm_sdd``  — sampled dense-dense backward kernels (gradient of the
+stored values at the stored coordinates; the custom VJP's dA half).
 
 Each kernel ships a pure-jnp oracle in ``ref.py``; ``ops.py`` dispatches
 between real-TPU Pallas, interpret-mode Pallas (CPU validation) and the
-reference path.
+reference path, and exposes ``loops_sdd`` for the backward pass.
 """
 from . import ops, ref
 from .bcsr_spmm import bcsr_spmm_pallas

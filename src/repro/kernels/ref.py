@@ -11,7 +11,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["csr_spmm_ref", "bcsr_spmm_ref", "dense_spmm", "acc_dtype_for"]
+__all__ = ["csr_spmm_ref", "bcsr_spmm_ref", "csr_sdd_ref", "bcsr_sdd_ref",
+           "dense_spmm", "acc_dtype_for"]
 
 
 def acc_dtype_for(dtype) -> jnp.dtype:
@@ -51,6 +52,37 @@ def bcsr_spmm_ref(tile_rows: jax.Array, tile_cols: jax.Array,
              * b[tile_cols].astype(acc)[:, None, :])  # (T, Br, N)
     blocks = jax.ops.segment_sum(outer, tile_rows, num_segments=nblocks)
     return blocks.reshape(nblocks * br, b.shape[1]).astype(out_dtype)
+
+
+def csr_sdd_ref(row_ids: jax.Array, col_idx: jax.Array, dy: jax.Array,
+                b: jax.Array) -> jax.Array:
+    """Sampled dense-dense product at the CSR-part coordinates:
+
+        dA[k] = dY[row_ids[k], :] · B[col_idx[k], :]
+
+    — the per-nonzero gradient of ``Y = A @ B`` w.r.t. A's stored values
+    (``dY ⊙ B`` sampled on the sparsity pattern).  Returns (nnz,) in the
+    fp32-accumulating dtype.
+    """
+    acc = acc_dtype_for(b.dtype)
+    return (dy[row_ids].astype(acc) * b[col_idx].astype(acc)).sum(axis=-1)
+
+
+def bcsr_sdd_ref(tile_rows: jax.Array, tile_cols: jax.Array, dy_pad: jax.Array,
+                 b: jax.Array, nblocks: int) -> jax.Array:
+    """Sampled dense-dense product at the BCSR-part tile coordinates:
+
+        dA[t, r] = dY[tile_rows[t]*Br + r, :] · B[tile_cols[t], :]
+
+    ``dy_pad`` is the BCSR region of the cotangent padded to
+    ``nblocks * Br`` rows (trimmed forward rows carry zero cotangent).
+    Returns (ntiles, Br) in the fp32-accumulating dtype.
+    """
+    acc = acc_dtype_for(b.dtype)
+    br = dy_pad.shape[0] // nblocks
+    blocks = dy_pad.reshape(nblocks, br, dy_pad.shape[1]).astype(acc)
+    return jnp.einsum("tbn,tn->tb", blocks[tile_rows],
+                      b[tile_cols].astype(acc))
 
 
 def dense_spmm(a_dense: jax.Array, b: jax.Array, out_dtype=None) -> jax.Array:

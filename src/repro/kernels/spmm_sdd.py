@@ -1,0 +1,179 @@
+"""Sampled dense-dense (SDD) Pallas kernels — the value-gradient half of the
+LOOPS custom VJP.
+
+For ``Y = A @ B`` with A sparse, the cotangent of A's *stored values* is the
+dense product ``dY @ Bᵀ`` sampled at the stored coordinates only:
+
+    dA[i, j] = dY[i, :] · B[j, :]        (i, j) ∈ structure(A)
+
+Materialising ``dY @ Bᵀ`` would cost O(M·K·N) and defeat the point of
+training a pruned layer; these kernels spend O(nnz·N) by walking the same
+G-wide panels the forward kernels execute (``repro.core.formats.PanelCSR`` /
+``PanelBCSR``), gathering the G rows ``B[panel_cols[p]]`` per grid step and
+contracting them against the panel's cotangent rows:
+
+  * CSR part — one grid step computes the G dot products
+    ``dY[panel_rows[p], :] · B[panel_cols[p, i], :]`` (a VPU
+    multiply-reduce, the AXPY kernel read backwards);
+  * BCSR part — one grid step computes a ``(Br, bn) @ (bn, G)`` MXU
+    contraction between the block-row's cotangent slab and the gathered B
+    panel, yielding all ``Br × G`` per-tile-element gradients at once.
+
+The grid is ``(P, N // bn)`` with the *column* blocks innermost: each panel's
+accumulator stays resident in VMEM scratch while the N-reduction streams
+through, then flushes once — the transpose of the forward kernels' resident
+output block.  Padding lanes produce garbage that is never read: the callers
+(``repro.kernels.ops.loops_sdd``) gather only real slots via the panels'
+``src_panel``/``src_lane`` maps, so no in-kernel mask is needed.
+
+Outputs are panel-layout ``(P, G)`` / ``(P, Br, G)`` arrays in the fp32
+accumulation dtype (the f16f16f32 contract of the forward kernels applies to
+the backward pass too).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .ref import acc_dtype_for
+
+__all__ = ["csr_sdd_panels_pallas", "bcsr_sdd_panels_pallas"]
+
+
+def _csr_sdd_kernel(g: int, *refs):
+    """One grid step: G masked-free dot products dY[row]·B[col_i] into the
+    panel's (1, G) accumulator; flush after the last column block."""
+    _, _, dy_ref, *rest = refs
+    b_refs, (o_ref, acc_ref) = rest[:g], rest[g:]
+    j = pl.program_id(1)
+    nb = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    dy = dy_ref[...].astype(acc_ref.dtype)          # (1, bn)
+    lanes = [jnp.sum(dy * b_ref[...].astype(acc_ref.dtype))[None]
+             for b_ref in b_refs]
+    acc_ref[...] += jnp.stack(lanes, axis=-1)       # (1, g)
+
+    @pl.when(j == nb - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "interpret"))
+def csr_sdd_panels_pallas(panel_rows: jax.Array, panel_cols: jax.Array,
+                          dy: jax.Array, b: jax.Array, *,
+                          bn: int | None = None,
+                          interpret: bool = True) -> jax.Array:
+    """Per-nonzero gradients for the CSR part, in panel layout.
+
+    Args:
+      panel_rows: (P,) int32 — cotangent row per panel (``PanelCSR`` order).
+      panel_cols: (P, G) int32 — gather rows of ``b`` per lane.
+      dy:         (M, N) output cotangent (rows beyond the CSR region are
+                  simply never indexed).
+      b:          (K, N) the forward dense operand.
+    Returns:
+      (P, G) gradients in the accumulation dtype; padding lanes undefined —
+      gather real slots with ``PanelCSR.gather_values``.
+    """
+    npanels, g = panel_cols.shape
+    n = b.shape[1]
+    bn = bn or min(n, 512)
+    if n % bn:
+        raise ValueError(f"N={n} not divisible by bn={bn}")
+    acc_dtype = acc_dtype_for(b.dtype)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # panel_rows, panel_cols
+        grid=(npanels, n // bn),
+        in_specs=[
+            pl.BlockSpec((1, bn), lambda p, j, rows, cols: (rows[p], j)),
+            *[pl.BlockSpec((1, bn),
+                           lambda p, j, rows, cols, i=i: (cols[p, i], j))
+              for i in range(g)],
+        ],
+        out_specs=pl.BlockSpec((1, g), lambda p, j, rows, cols: (p, 0)),
+        scratch_shapes=[pltpu.VMEM((1, g), acc_dtype)],
+    )
+    return pl.pallas_call(
+        functools.partial(_csr_sdd_kernel, g),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((npanels, g), acc_dtype),
+        interpret=interpret,
+    )(panel_rows, panel_cols, dy, *([b] * g))
+
+
+def _bcsr_sdd_kernel(g: int, *refs):
+    """One grid step: gather the G B-rows into scratch, one (Br,bn)@(bn,G)
+    MXU contraction against the block-row's cotangent slab."""
+    _, _, dy_ref, *rest = refs
+    b_refs, (o_ref, bpan_ref, acc_ref) = rest[:g], rest[g:]
+    j = pl.program_id(1)
+    nb = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    for i, b_ref in enumerate(b_refs):
+        bpan_ref[i, :] = b_ref[...].astype(bpan_ref.dtype)[0]
+
+    acc_ref[...] += jax.lax.dot_general(
+        dy_ref[...].astype(acc_ref.dtype), bpan_ref[...],
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=acc_ref.dtype)       # (br, g)
+
+    @pl.when(j == nb - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...][None].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("br", "bn", "interpret"))
+def bcsr_sdd_panels_pallas(panel_rows: jax.Array, panel_cols: jax.Array,
+                           dy_pad: jax.Array, b: jax.Array, *, br: int,
+                           bn: int | None = None,
+                           interpret: bool = True) -> jax.Array:
+    """Per-tile-element gradients for the BCSR part, in panel layout.
+
+    Args:
+      panel_rows: (P,) int32 — block-row per panel (``PanelBCSR`` order).
+      panel_cols: (P, G) int32 — gather rows of ``b`` per lane.
+      dy_pad:     (nblocks * Br, N) — the BCSR region of the cotangent,
+                  zero-padded to full blocks (trimmed rows ⇒ zero grad).
+      b:          (K, N) the forward dense operand.
+    Returns:
+      (P, Br, G) gradients in the accumulation dtype; padding lanes
+      undefined — gather real slots with ``PanelBCSR.gather_values``.
+    """
+    npanels, g = panel_cols.shape
+    n = b.shape[1]
+    bn = bn or min(n, 512)
+    if n % bn:
+        raise ValueError(f"N={n} not divisible by bn={bn}")
+    acc_dtype = acc_dtype_for(b.dtype)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # panel_rows, panel_cols
+        grid=(npanels, n // bn),
+        in_specs=[
+            pl.BlockSpec((br, bn), lambda p, j, rows, cols: (rows[p], j)),
+            *[pl.BlockSpec((1, bn),
+                           lambda p, j, rows, cols, i=i: (cols[p, i], j))
+              for i in range(g)],
+        ],
+        out_specs=pl.BlockSpec((1, br, g),
+                               lambda p, j, rows, cols: (p, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((g, bn), acc_dtype),     # B panel
+                        pltpu.VMEM((br, g), acc_dtype)],    # accumulator
+    )
+    return pl.pallas_call(
+        functools.partial(_bcsr_sdd_kernel, g),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((npanels, br, g), acc_dtype),
+        interpret=interpret,
+    )(panel_rows, panel_cols, dy_pad, *([b] * g))

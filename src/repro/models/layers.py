@@ -9,6 +9,11 @@ Conventions
   in fp32 on the MXU (the same contract as the LOOPS bf16 kernels).
 * Attention is chunked/online-softmax (flash-style) so 32k-token prefill
   never materialises an (S, S) score matrix.
+* Every layer is differentiable on its real execution path — there is no
+  dense-gradient or reference-backend detour anywhere in the training
+  graph.  Dense layers rely on native autodiff; the LOOPS-sparse linear
+  (:mod:`repro.models.sparse_ffn`) carries its own custom VJP so the
+  Pallas kernels train directly (see ``docs/training.md``).
 """
 from __future__ import annotations
 

@@ -12,26 +12,28 @@ so the hot loop is exactly the paper's kernel pair: irregular weight rows on
 the vector pipeline, regular rows as Br x 1 outer-product tiles on the matrix
 pipeline.
 
-Differentiation note: training runs the ``jnp`` (reference) backend — the
-Pallas kernels target inference/serving and carry no custom VJP; both share
-the same format, so a model trained on the reference path serves on the
-Pallas path bit-for-bit (tests assert this).
+Differentiation: the layer trains directly on the Pallas backends through
+:func:`repro.core.spmm.loops_spmm_values` — a ``jax.custom_vjp`` whose
+backward pass runs ``dx = Wᵀ·dy`` on the cached transposed format (live
+values carried across by static scatter maps) and computes the value
+gradients with the sampled dense-dense kernels (``kernels/spmm_sdd.py``),
+never materialising ``dy @ xᵀ`` densely.  The ``jnp`` backend remains the
+gradient oracle (native autodiff through the reference kernels); both share
+the same format, so a model trained on either path serves on the Pallas path
+bit-for-bit (tests assert this).  See ``docs/training.md``.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.formats import CSR, LoopsFormat, csr_from_dense, loops_from_csr
-from ..core.spmm import plan_and_convert
-from ..kernels import ref
-from ..kernels.bcsr_spmm import bcsr_spmm_pallas
-from ..kernels.csr_spmm import csr_spmm_pallas
-from .layers import F32, Params
+from ..core.formats import LoopsFormat, csr_from_dense
+from ..core.spmm import loops_spmm_values, plan_and_convert
+from ..kernels import ops
+from .layers import Params
 
 __all__ = ["SparseLinear", "sparse_linear_from_dense", "magnitude_prune",
            "sparse_linear_apply"]
@@ -77,35 +79,16 @@ def sparse_linear_from_dense(w: np.ndarray, sparsity: float, *,
 
 
 def sparse_linear_apply(layer: SparseLinear, values: Params, x: jax.Array,
-                        *, backend: str = "jnp") -> jax.Array:
-    """x: (..., d_in) -> (..., d_out) via LOOPS SpMM with live values."""
+                        *, backend: str | None = None) -> jax.Array:
+    """x: (..., d_in) -> (..., d_out) via LOOPS SpMM with live values.
+
+    Fully differentiable on every backend (``backend=None`` picks the real
+    kernel path — 'pallas' on TPU, 'interpret' elsewhere): gradients flow to
+    both the activation and the stored weight values through the custom VJP.
+    """
+    backend = backend or ops.default_backend()
     lead = x.shape[:-1]
     xt = x.reshape(-1, layer.d_in).T           # (d_in, T) dense operand B
-    fmt = layer.fmt
-    out_dtype = ref.acc_dtype_for(values["csr_vals"].dtype)
-    parts = []
-    if fmt.r_boundary > 0:
-        csr = fmt.csr_part
-        row_ids, col_idx = jnp.asarray(csr.row_ids), jnp.asarray(csr.col_idx)
-        if backend == "jnp":
-            parts.append(ref.csr_spmm_ref(row_ids, col_idx,
-                                          values["csr_vals"], xt, csr.nrows,
-                                          out_dtype=out_dtype))
-        else:
-            parts.append(csr_spmm_pallas(row_ids, col_idx,
-                                         values["csr_vals"], xt,
-                                         nrows=csr.nrows, out_dtype=out_dtype,
-                                         interpret=(backend == "interpret")))
-    if fmt.r_boundary < fmt.nrows:
-        b = fmt.bcsr_part
-        trows, tcols = jnp.asarray(b.tile_rows), jnp.asarray(b.tile_cols)
-        if backend == "jnp":
-            padded = ref.bcsr_spmm_ref(trows, tcols, values["bcsr_vals"], xt,
-                                       b.nblocks, out_dtype=out_dtype)
-        else:
-            padded = bcsr_spmm_pallas(trows, tcols, values["bcsr_vals"], xt,
-                                      nblocks=b.nblocks, out_dtype=out_dtype,
-                                      interpret=(backend == "interpret"))
-        parts.append(padded[:b.nrows])
-    y = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=0)
+    y = loops_spmm_values(layer.fmt, values["csr_vals"], values["bcsr_vals"],
+                          xt, backend=backend)
     return y.T.reshape(*lead, layer.d_out).astype(x.dtype)

@@ -1,0 +1,103 @@
+#!/usr/bin/env python
+"""Documentation link/reference checker (CI docs job; no dependencies).
+
+Scans the repo's markdown surface (``README.md``, ``docs/*.md``,
+``ROADMAP.md``, ``CHANGES.md``) for
+
+  * **relative markdown links** ``[text](path)`` — the target file must
+    exist (anchors and external ``http(s)``/``mailto`` links are skipped);
+  * **code references** of the form ``path/to/file.py::symbol`` (the house
+    style throughout ``docs/architecture.md``) — the file must exist
+    (resolved against the repo root, then ``src/repro/``) and the symbol
+    name must occur in it, so renaming or deleting a function without
+    updating the docs fails CI;
+  * **bare ``.py`` paths in backticks** — same existence resolution.
+
+Exit status 0 when clean; 1 with a per-problem listing otherwise.
+
+Run:  python tools/check_docs.py
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SYMREF_RE = re.compile(r"([\w][\w./-]*\.py)::([A-Za-z_][A-Za-z0-9_]*)")
+PYPATH_RE = re.compile(r"`([\w][\w./-]*\.py)`")
+
+
+def _doc_files():
+    files = [ROOT / "README.md", ROOT / "ROADMAP.md", ROOT / "CHANGES.md"]
+    files += sorted((ROOT / "docs").glob("*.md"))
+    return [f for f in files if f.exists()]
+
+
+def _resolve_py(path_str: str, base: pathlib.Path):
+    """A .py reference may be repo-root-relative, src- or src/repro-relative
+    (the architecture.md shorthands) or relative to the referencing
+    document; a bare filename (``train.py`` under a ``launch/`` heading)
+    resolves if any file of that name exists in the tree."""
+    for cand in (ROOT / path_str, ROOT / "src" / path_str,
+                 ROOT / "src" / "repro" / path_str, base.parent / path_str):
+        if cand.exists():
+            return cand
+    if "/" not in path_str:
+        for cand in ROOT.rglob(path_str):
+            return cand
+    return None
+
+
+def check_file(md: pathlib.Path):
+    problems = []
+    text = md.read_text()
+    rel = md.relative_to(ROOT)
+
+    for m in LINK_RE.finditer(text):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        plain = target.split("#", 1)[0]
+        if not plain:
+            continue
+        if not (md.parent / plain).exists() and not (ROOT / plain).exists():
+            problems.append(f"{rel}: dead link -> {target}")
+
+    for m in SYMREF_RE.finditer(text):
+        path_str, symbol = m.groups()
+        target = _resolve_py(path_str, md)
+        if target is None:
+            problems.append(f"{rel}: missing file in ref {path_str}::{symbol}")
+            continue
+        if not re.search(rf"\b{re.escape(symbol)}\b", target.read_text()):
+            problems.append(
+                f"{rel}: {path_str} no longer defines '{symbol}'")
+
+    for m in PYPATH_RE.finditer(text):
+        path_str = m.group(1)
+        if "::" in m.group(0):
+            continue
+        if _resolve_py(path_str, md) is None:
+            problems.append(f"{rel}: referenced file missing -> {path_str}")
+
+    return problems
+
+
+def main() -> int:
+    problems = []
+    for md in _doc_files():
+        problems += check_file(md)
+    if problems:
+        print(f"check_docs: {len(problems)} problem(s)")
+        for p in problems:
+            print("  " + p)
+        return 1
+    print(f"check_docs: OK ({len(_doc_files())} files clean)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
