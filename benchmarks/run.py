@@ -14,6 +14,8 @@ wall-clock) that CI diffs against.
   table4 — end-to-end GCN training (§4.5 / Table 4)
   roofline — §Roofline terms for every dry-run cell (assignment)
   autotune — model-only vs measured/cached plans + cache hit rates
+  batched  — multi-RHS engine: per-element loop vs vmap-unrolled vs
+             native batched (fwd and fwd+bwd, grid-step columns)
 
 ``--smoke`` shrinks the suites that support it (tiny matrices, fewer
 repeats) for CI: kernel-layer regressions then surface as benchmark
@@ -33,13 +35,14 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: fig4,fig5,sec43,table3,table4,"
-                         "roofline,autotune")
+                         "roofline,autotune,batched")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny-suite CI mode (suites that support it)")
     args = ap.parse_args()
 
-    from . import (autotune_suite, fig4_throughput, fig5_halfprec, roofline,
-                   sec43_scheduling, table3_energy, table4_gnn)
+    from . import (autotune_suite, batched_spmm, fig4_throughput,
+                   fig5_halfprec, roofline, sec43_scheduling, table3_energy,
+                   table4_gnn)
     suites = {
         "fig4": fig4_throughput.main,
         "fig5": fig5_halfprec.main,
@@ -48,6 +51,7 @@ def main() -> None:
         "table4": table4_gnn.main,
         "roofline": roofline.main,
         "autotune": autotune_suite.main,
+        "batched": batched_spmm.main,
     }
     chosen = (args.only.split(",") if args.only else list(suites))
 

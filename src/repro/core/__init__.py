@@ -12,8 +12,9 @@ from .formats import (CSR, DEFAULT_PANEL_G, LoopsFormat, PanelBCSR, PanelCSR,
 from .partition import choose_r_boundary, regularity_boundary, row_stats
 from .perf_model import (QuadraticPerfModel, best_allocation, calibrate,
                          fit_perf_model)
-from .spmm import (SpmmPlan, loops_grid_steps, loops_spmm, loops_spmm_values,
-                   plan_and_convert, spmm_csr_baseline, spmm_dense_baseline)
+from .spmm import (SpmmPlan, loops_batched_grid_steps, loops_grid_steps,
+                   loops_spmm, loops_spmm_values, plan_and_convert,
+                   spmm_csr_baseline, spmm_dense_baseline)
 from .distributed import (ShardedLoops, distributed_spmm, shard_loops,
                           shard_loops_auto)
 
@@ -25,7 +26,8 @@ __all__ = [
     "panelize_csr", "transposed_values", "choose_r_boundary",
     "regularity_boundary", "row_stats", "QuadraticPerfModel",
     "best_allocation", "calibrate", "fit_perf_model", "SpmmPlan",
-    "loops_grid_steps", "loops_spmm", "loops_spmm_values",
+    "loops_batched_grid_steps", "loops_grid_steps", "loops_spmm",
+    "loops_spmm_values",
     "plan_and_convert", "spmm_csr_baseline",
     "spmm_dense_baseline", "ShardedLoops", "distributed_spmm", "shard_loops",
     "shard_loops_auto",

@@ -219,6 +219,12 @@ def distributed_spmm(sharded: ShardedLoops, b: jax.Array, mesh: Mesh,
     ``axis`` may be a single mesh axis or a tuple (e.g. ("data", "model") to
     flatten the whole production pod into one SpMM worker axis).
 
+    ``b`` follows the engine's batched contract ``(..., K, N)`` and is
+    consumed by the batched reference kernels directly — one shard_map call
+    serves every batch slice (no per-element Python loop, no flattening
+    reshape at the call site); the result is ``(..., M, N)`` assembled, or
+    ``(D, ..., rows_pad, N)`` stacked.
+
     Every device computes its local kernel over its shard (the off-group
     kernel sees a single zero entry and contributes nothing), then the
     per-device row slices are concatenated with statically known offsets —
@@ -227,11 +233,13 @@ def distributed_spmm(sharded: ShardedLoops, b: jax.Array, mesh: Mesh,
 
     Differentiable w.r.t. ``b`` via a custom VJP: each device transposes its
     own row shard against its exclusive slice of the cotangent
-    (``Aᵀ_shard · dY_shard``) and the partials are summed with
-    :func:`repro.dist.step.loops_cotangent_psum` — the backward dual of B's
-    replicated entry in ``loops_in_specs`` — so ``dB`` comes back replicated
-    exactly like the operand it is the gradient of.
+    (``Aᵀ_shard · dY_shard``, batch dims carried through) and the partials
+    are summed with :func:`repro.dist.step.loops_cotangent_psum` — the
+    backward dual of B's replicated entry in ``loops_in_specs`` — so ``dB``
+    comes back replicated exactly like the operand it is the gradient of.
     """
+    from ..kernels.engine import check_rhs
+    check_rhs(sharded.shape[1], b)
 
     @jax.custom_vjp
     def run_vjp(b_):
@@ -276,7 +284,7 @@ def _distributed_execute(sharded: ShardedLoops, b: jax.Array, mesh: Mesh,
                                            tile_vals[0])
         out_c = ref.csr_spmm_ref(row_ids, col_idx, vals, bloc, rows_pad)
         out_b = ref.bcsr_spmm_ref(tile_rows, tile_cols, tile_vals, bloc,
-                                  nblocks_pad)[:rows_pad]
+                                  nblocks_pad)[..., :rows_pad, :]
         return (out_c + out_b)[None]
 
     stacked = run(jnp.asarray(sharded.row_ids), jnp.asarray(sharded.col_idx),
@@ -285,14 +293,14 @@ def _distributed_execute(sharded: ShardedLoops, b: jax.Array, mesh: Mesh,
                   jnp.asarray(sharded.tile_vals), b)
 
     if not assemble:
-        # §Perf iteration: leave C row-sharded (D, rows_pad, N).  Row
+        # §Perf iteration: leave C row-sharded (D, ..., rows_pad, N).  Row
         # ownership is exclusive (paper §3.4), so downstream row-parallel
         # consumers (GNN layers, further SpMMs) read their shard locally —
         # assembling to a replicated dense C is pure collective overhead.
         return stacked
-    pieces = [stacked[d, :sharded.row_count[d]] for d in range(D)
+    pieces = [stacked[d][..., :sharded.row_count[d], :] for d in range(D)
               if sharded.row_count[d] > 0]
-    return jnp.concatenate(pieces, axis=0)
+    return jnp.concatenate(pieces, axis=-2)
 
 
 def _distributed_db(sharded: ShardedLoops, dy: jax.Array, mesh: Mesh,
@@ -303,8 +311,9 @@ def _distributed_db(sharded: ShardedLoops, dy: jax.Array, mesh: Mesh,
     shard (a scatter-by-column segment-sum — the transposed reading of the
     two reference kernels), then the partials are psummed over the worker
     axis (:func:`repro.dist.step.loops_cotangent_psum`).  ``dy`` arrives
-    assembled ``(M, N)`` or stacked ``(D, rows_pad, N)`` to mirror whichever
-    layout the forward produced.
+    assembled ``(..., M, N)`` or stacked ``(D, ..., rows_pad, N)`` to mirror
+    whichever layout the forward produced; batch dims pass straight through
+    (``dB`` is per batch element — only the worker axis is summed).
     """
     from ..dist.step import loops_cotangent_psum   # lazy: avoids import cycle
     axes, D = _worker_axes(mesh, axis)
@@ -315,10 +324,12 @@ def _distributed_db(sharded: ShardedLoops, dy: jax.Array, mesh: Mesh,
     if assemble:
         # Slice the global cotangent back into the devices' exclusive row
         # ranges (static offsets — pure data movement, no collective).
+        no_pad = [(0, 0)] * (dy.ndim - 2)
         slices = []
         for d in range(D):
             o, c = sharded.row_offset[d], sharded.row_count[d]
-            slices.append(jnp.pad(dy[o:o + c], ((0, rows_pad - c), (0, 0))))
+            slices.append(jnp.pad(dy[..., o:o + c, :],
+                                  no_pad + [(0, rows_pad - c), (0, 0)]))
         dy_stacked = jnp.stack(slices)
     else:
         dy_stacked = dy
@@ -333,18 +344,28 @@ def _distributed_db(sharded: ShardedLoops, dy: jax.Array, mesh: Mesh,
         row_ids, col_idx, vals = row_ids[0], col_idx[0], vals[0]
         tile_rows, tile_cols, tile_vals = (tile_rows[0], tile_cols[0],
                                            tile_vals[0])
-        dyl = dyl[0]                                       # (rows_pad, N)
+        dyl = dyl[0]                                   # (..., rows_pad, N)
         acc = ref.acc_dtype_for(vals.dtype)
-        db_c = jax.ops.segment_sum(
-            vals.astype(acc)[:, None] * dyl[row_ids].astype(acc), col_idx,
-            num_segments=k)
-        pad = nblocks_pad * br - rows_pad
-        dyb = jnp.pad(dyl, ((0, pad), (0, 0))) if pad else dyl
-        blocks = dyb.reshape(nblocks_pad, br, n).astype(acc)
-        contrib = jnp.einsum("tb,tbn->tn", tile_vals.astype(acc),
-                             blocks[tile_rows])
-        db_b = jax.ops.segment_sum(contrib, tile_cols, num_segments=k)
-        return loops_cotangent_psum(db_c + db_b, axes)
+
+        def _local_db(dyl2):                           # (rows_pad, N)
+            db_c = jax.ops.segment_sum(
+                vals.astype(acc)[:, None] * dyl2[row_ids].astype(acc),
+                col_idx, num_segments=k)
+            pad = nblocks_pad * br - rows_pad
+            dyb = jnp.pad(dyl2, ((0, pad), (0, 0))) if pad else dyl2
+            blocks = dyb.reshape(nblocks_pad, br, n).astype(acc)
+            contrib = jnp.einsum("tb,tbn->tn", tile_vals.astype(acc),
+                                 blocks[tile_rows])
+            db_b = jax.ops.segment_sum(contrib, tile_cols, num_segments=k)
+            return db_c + db_b
+
+        if dyl.ndim > 2:                               # batched cotangent
+            lead = dyl.shape[:-2]
+            flat = dyl.reshape((-1,) + dyl.shape[-2:])
+            db = jax.vmap(_local_db)(flat).reshape(lead + (k, n))
+        else:
+            db = _local_db(dyl)
+        return loops_cotangent_psum(db, axes)
 
     return run(jnp.asarray(sharded.row_ids), jnp.asarray(sharded.col_idx),
                jnp.asarray(sharded.vals), jnp.asarray(sharded.tile_rows),

@@ -13,25 +13,37 @@ Both execution entry points (``loops_spmm`` for static matrices,
 the Pallas backends via ``jax.custom_vjp`` — ``dB = Aᵀ·dY`` through the
 same kernels on the cached transposed format, ``dA``-at-nonzeros through
 the SDD kernels; see ``docs/training.md``.
+
+Batched multi-RHS execution
+---------------------------
+The dense operand may carry any leading batch dims — ``B`` of shape
+``(..., K, N)`` returns ``(..., M, N)`` — and executes as ONE batched
+engine call (``kernels/engine.py``): the Pallas grids gain a leading
+batch-block axis that reuses A's static panel layout across all slices.
+``jax.vmap`` over the operand lowers to the same native batched call via a
+``jax.custom_batching.custom_vmap`` rule instead of unrolling one
+``pallas_call`` per element; the custom VJP carries the batch through
+``dB = Aᵀ·dY`` (batched) and the SDD ``dA`` (summed over the batch — the
+stored values are shared).  An empty batch returns correctly-shaped zeros
+on every backend.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..kernels import ops, ref
+from ..kernels import engine, ref
 from . import partition
 from .formats import (CSR, DEFAULT_PANEL_G, HALF_PACKED_ROWS, LoopsFormat,
                       SUBLANE_ROWS, loops_from_csr)
 from .perf_model import QuadraticPerfModel
 
 __all__ = ["loops_spmm", "loops_spmm_values", "loops_grid_steps",
-           "plan_and_convert", "SpmmPlan", "spmm_csr_baseline",
-           "spmm_dense_baseline"]
+           "loops_batched_grid_steps", "plan_and_convert", "SpmmPlan",
+           "spmm_csr_baseline", "spmm_dense_baseline"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -95,50 +107,94 @@ def _loops_execute(fmt: LoopsFormat, b: jax.Array, backend: str, bn,
                    out_dtype, csr_vals=None, bcsr_vals=None) -> jax.Array:
     """Backend dispatch for one hybrid SpMM (no differentiation rule).
 
-    ``csr_vals``/``bcsr_vals`` optionally substitute traced live values for
-    the format's host-packed constants (learned-sparse-weight layers and the
-    transposed backward pass both need this); the structure stays static.
+    ``b`` may carry leading batch dims (the engine folds them into the
+    kernels' native batch grid).  ``csr_vals``/``bcsr_vals`` optionally
+    substitute traced live values for the format's host-packed constants
+    (learned-sparse-weight layers and the transposed backward pass both need
+    this); the structure stays static.
     """
     has_csr = fmt.r_boundary > 0
     has_bcsr = fmt.r_boundary < fmt.nrows
     pallas = backend != "jnp"   # panel views only materialise for Pallas
     if (has_csr and has_bcsr and pallas
             and fmt.r_boundary % fmt.bcsr_part.br == 0):
-        return ops.loops_spmm_fused(fmt, b, backend=backend, bn=bn,
-                                    out_dtype=out_dtype, csr_vals=csr_vals,
-                                    bcsr_vals=bcsr_vals)
+        return engine.loops_spmm_fused(fmt, b, backend=backend, bn=bn,
+                                       out_dtype=out_dtype, csr_vals=csr_vals,
+                                       bcsr_vals=bcsr_vals)
     parts = []
     if has_csr:
-        parts.append(ops.csr_spmm(fmt.csr_part, b, backend=backend, bn=bn,
-                                  out_dtype=out_dtype,
-                                  panels=fmt.csr_panels if pallas else None,
-                                  vals=csr_vals))
+        parts.append(engine.csr_spmm(
+            fmt.csr_part, b, backend=backend, bn=bn, out_dtype=out_dtype,
+            panels=fmt.csr_panels if pallas else None, vals=csr_vals))
     if has_bcsr:
-        parts.append(ops.bcsr_spmm(fmt.bcsr_part, b, backend=backend, bn=bn,
-                                   out_dtype=out_dtype,
-                                   panels=fmt.bcsr_panels if pallas
-                                   else None,
-                                   vals=bcsr_vals))
+        parts.append(engine.bcsr_spmm(
+            fmt.bcsr_part, b, backend=backend, bn=bn, out_dtype=out_dtype,
+            panels=fmt.bcsr_panels if pallas else None, vals=bcsr_vals))
     if not parts:
-        return jnp.zeros((fmt.nrows, b.shape[1]), out_dtype)
-    return parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=0)
+        _, out = engine.resolve_dtypes(fmt.csr_part.vals.dtype, out_dtype)
+        return jnp.zeros(b.shape[:-2] + (fmt.nrows, b.shape[-1]), out)
+    return parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=-2)
+
+
+def _index_maybe(x, batched: bool, i):
+    return None if x is None else (x[i] if batched else x)
+
+
+def _execute_engine(fmt: LoopsFormat, b: jax.Array, backend: str, bn,
+                    out_dtype, csr_vals=None, bcsr_vals=None) -> jax.Array:
+    """Pallas-path executor with a custom batching rule.
+
+    ``jax.vmap`` over the dense operand folds the mapped axis into the
+    kernels' native leading batch dimension — one batched ``pallas_call``
+    per part — instead of relying on generic per-element unrolling.  A vmap
+    over A's *values* has no native batched kernel (the operand panels
+    change per element) and falls back to trace-time unrolling, the exact
+    pre-batched behaviour.
+    """
+
+    @jax.custom_batching.custom_vmap
+    def call(b_, cv, bv):
+        return _loops_execute(fmt, b_, backend, bn, out_dtype,
+                              csr_vals=cv, bcsr_vals=bv)
+
+    @call.def_vmap
+    def _batch_rule(axis_size, in_batched, b_, cv, bv):
+        b_batched = bool(jax.tree.leaves(in_batched[0])[0])
+        vals_batched = (any(jax.tree.leaves(in_batched[1]))
+                        or any(jax.tree.leaves(in_batched[2])))
+        if vals_batched or not b_batched:
+            outs = [_execute_engine(
+                fmt, _index_maybe(b_, b_batched, i), backend, bn, out_dtype,
+                _index_maybe(cv, any(jax.tree.leaves(in_batched[1])), i),
+                _index_maybe(bv, any(jax.tree.leaves(in_batched[2])), i))
+                for i in range(axis_size)]
+            return jnp.stack(outs), True
+        lead = b_.shape[:-2]
+        out = _execute_engine(fmt, b_.reshape((-1,) + b_.shape[-2:]),
+                              backend, bn, out_dtype, cv, bv)
+        return out.reshape(lead + out.shape[-2:]), True
+
+    return call(b, csr_vals, bcsr_vals)
 
 
 def _backward_db(fmt: LoopsFormat, dy: jax.Array, backend: str, bn,
                  transpose_plan, csr_vals=None, bcsr_vals=None) -> jax.Array:
     """``dB = Aᵀ · dY`` through the same panel kernels on the (cached)
-    transposed format.  The cotangent is cast to the format's value dtype
-    first — the backward matmuls honour the forward kernels' precision
-    contract (bf16 operands, fp32 accumulation) instead of silently running
-    a wider product."""
+    transposed format — batched per cotangent slice when ``dy`` carries
+    batch dims.  The cotangent is cast to the format's value dtype first —
+    the backward matmuls honour the forward kernels' precision contract
+    (bf16 operands, fp32 accumulation) instead of silently running a wider
+    product."""
     from .formats import transposed_values
     tl = fmt.transposed(plan=transpose_plan)
     dy = dy.astype(tl.fmt.csr_part.vals.dtype)
     cv = bv = None
     if csr_vals is not None:
         cv, bv = transposed_values(tl, csr_vals, bcsr_vals)
-    return _loops_execute(tl.fmt, dy, backend, bn, None,
-                          csr_vals=cv, bcsr_vals=bv)
+    if backend == "jnp":
+        return _loops_execute(tl.fmt, dy, backend, bn, None,
+                              csr_vals=cv, bcsr_vals=bv)
+    return _execute_engine(tl.fmt, dy, backend, bn, None, cv, bv)
 
 
 def loops_spmm(fmt: LoopsFormat, b: jax.Array, *, backend: str | None = None,
@@ -146,14 +202,22 @@ def loops_spmm(fmt: LoopsFormat, b: jax.Array, *, backend: str | None = None,
                transpose_plan: "SpmmPlan | None" = None) -> jax.Array:
     """Execute the hybrid SpMM: C = A @ B with A in LOOPS format.
 
-    The CSR-part rows land in C[:r_boundary], the BCSR-part rows in
-    C[r_boundary:]; each output row is written by exactly one kernel
+    ``b`` has shape ``(..., K, N)``; the result is ``(..., nrows, N)``.
+    Leading batch dims execute as ONE batched engine call — the Pallas
+    grids gain a batch axis that reuses A's static panel layout across all
+    slices — and ``jax.vmap`` over ``b`` lowers to the same call via a
+    custom batching rule.  A batch dim of zero returns correctly-shaped
+    zeros on every backend; a rank-1 or K-mismatched ``b`` raises
+    ``ValueError``.
+
+    The CSR-part rows land in C[..., :r_boundary, :], the BCSR-part rows in
+    C[..., r_boundary:, :]; each output row is written by exactly one kernel
     (paper §3.4 — conflict-free by construction).
 
     On the Pallas backends a hybrid format executes single-pass
-    (:func:`repro.kernels.ops.loops_spmm_fused`): both kernels fill disjoint
-    row ranges of ONE buffer through ``input_output_aliases`` + offset
-    index_maps, so no ``concatenate`` copy appears in the jaxpr.  The
+    (:func:`repro.kernels.engine.loops_spmm_fused`): both kernels fill
+    disjoint row ranges of ONE buffer through ``input_output_aliases`` +
+    offset index_maps, so no ``concatenate`` copy appears in the jaxpr.  The
     two-output + concatenate fallback remains for the jnp reference and for
     boundaries not aligned to the tile height.
 
@@ -167,20 +231,20 @@ def loops_spmm(fmt: LoopsFormat, b: jax.Array, *, backend: str | None = None,
     :func:`loops_spmm_values`.  (Reverse mode only; the VJP itself is not
     further differentiable.)
     """
-    backend = backend or ops.default_backend()
-    out_dtype = out_dtype or ref.acc_dtype_for(
-        jnp.dtype(fmt.csr_part.vals.dtype))
-    if fmt.nnz == 0:
-        # All-zero matrix: every stored entry is structural padding, so the
-        # product is identically zero — including the nrows > 0 case, which
-        # must yield a full (nrows, N) block, not a (0, N) stub.
-        return jnp.zeros((fmt.nrows, b.shape[1]), out_dtype)
+    backend = engine.resolve_backend(backend)
+    _, out_dtype = engine.resolve_dtypes(fmt.csr_part.vals.dtype, out_dtype)
+    engine.check_rhs(fmt.ncols, b)
+    if fmt.nnz == 0 or any(d == 0 for d in b.shape[:-2]):
+        # All-zero matrix (every stored entry is structural padding) or an
+        # empty batch: the product is identically zero with the full
+        # (..., nrows, N) shape — never a (0, N) stub.
+        return jnp.zeros(b.shape[:-2] + (fmt.nrows, b.shape[-1]), out_dtype)
     if backend == "jnp":
         return _loops_execute(fmt, b, backend, bn, out_dtype)
 
     @jax.custom_vjp
     def run(b_):
-        return _loops_execute(fmt, b_, backend, bn, out_dtype)
+        return _execute_engine(fmt, b_, backend, bn, out_dtype)
 
     def run_fwd(b_):
         return run(b_), None   # A is static: dB needs only the cotangent
@@ -204,30 +268,35 @@ def loops_spmm_values(fmt: LoopsFormat, csr_vals: jax.Array,
     pytree leaves laid out exactly like ``fmt.csr_part.vals`` /
     ``fmt.bcsr_part.tile_vals``; the structure in ``fmt`` stays static.
     This is the learned-sparse-weight entry point
-    (:mod:`repro.models.sparse_ffn`).
+    (:mod:`repro.models.sparse_ffn`).  ``b`` follows the same batched
+    ``(..., K, N)`` contract as :func:`loops_spmm`.
 
     On the Pallas backends a ``jax.custom_vjp`` supplies all three
     cotangents:
 
       * ``dB = Aᵀ · dY`` — the same panel kernels on the cached transposed
         format, with the live values carried across by the static
-        value-linear maps (:func:`repro.core.formats.transposed_values`);
+        value-linear maps (:func:`repro.core.formats.transposed_values`),
+        batched per cotangent slice;
       * ``dA`` at stored coordinates — the sampled dense-dense kernels
-        (:func:`repro.kernels.ops.loops_sdd`), never materialising
-        ``dY @ Bᵀ``.
+        (:func:`repro.kernels.engine.loops_sdd`), never materialising
+        ``dY @ Bᵀ``, **summed over batch dims** (the values are shared
+        across the batch).
 
     The jnp reference differentiates natively (gradient oracle).
     """
-    backend = backend or ops.default_backend()
-    out_dtype = out_dtype or ref.acc_dtype_for(jnp.dtype(csr_vals.dtype))
+    backend = engine.resolve_backend(backend)
+    _, out_dtype = engine.resolve_dtypes(jnp.dtype(csr_vals.dtype), out_dtype)
+    engine.check_rhs(fmt.ncols, b)
+    if any(d == 0 for d in b.shape[:-2]):
+        return jnp.zeros(b.shape[:-2] + (fmt.nrows, b.shape[-1]), out_dtype)
     if backend == "jnp":
         return _loops_execute(fmt, b, backend, bn, out_dtype,
                               csr_vals=csr_vals, bcsr_vals=bcsr_vals)
 
     @jax.custom_vjp
     def run(cv, bv, b_):
-        return _loops_execute(fmt, b_, backend, bn, out_dtype,
-                              csr_vals=cv, bcsr_vals=bv)
+        return _execute_engine(fmt, b_, backend, bn, out_dtype, cv, bv)
 
     def run_fwd(cv, bv, b_):
         return run(cv, bv, b_), (cv, bv, b_)
@@ -236,7 +305,7 @@ def loops_spmm_values(fmt: LoopsFormat, csr_vals: jax.Array,
         cv, bv, b_ = res
         db = _backward_db(fmt, dy, backend, bn, transpose_plan,
                           csr_vals=cv, bcsr_vals=bv)
-        d_cv, d_bv = ops.loops_sdd(fmt, dy, b_, backend=backend, bn=bn)
+        d_cv, d_bv = engine.loops_sdd(fmt, dy, b_, backend=backend, bn=bn)
         return (d_cv.astype(cv.dtype), d_bv.astype(bv.dtype),
                 db.astype(b_.dtype))
 
@@ -266,6 +335,24 @@ def loops_grid_steps(fmt: LoopsFormat, n_cols: int,
     if fmt.r_boundary == fmt.nrows:
         p_bcsr = 0
     return (p_csr + p_bcsr) * col_blocks
+
+
+def loops_batched_grid_steps(fmt: LoopsFormat, batch, n_cols: int,
+                             bn: int | None = None) -> int:
+    """Grid steps of ONE native batched engine call against a
+    ``(*batch, K, n_cols)`` operand.
+
+    The batched grids process ``engine.batch_block`` slices per step (A's
+    panel loaded once, applied to every slice), so the count grows by
+    ``ceil(batch / bz)`` — at ``batch ≤ MAX_BATCH_BLOCK`` it EQUALS the
+    single-element count, while a per-element Python loop pays
+    ``batch × loops_grid_steps`` (plus a dispatch per element).
+    """
+    b = int(np.prod(batch)) if np.ndim(batch) else int(batch)
+    if b == 0:
+        return 0
+    bp = engine.padded_batch(b)   # awkward sizes zero-pad into wide blocks
+    return (bp // engine.batch_block(bp)) * loops_grid_steps(fmt, n_cols, bn)
 
 
 # ---------------------------------------------------------------------------

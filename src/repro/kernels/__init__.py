@@ -5,12 +5,17 @@
 ``spmm_sdd``  — sampled dense-dense backward kernels (gradient of the
 stored values at the stored coordinates; the custom VJP's dA half).
 
-Each kernel ships a pure-jnp oracle in ``ref.py``; ``ops.py`` dispatches
-between real-TPU Pallas, interpret-mode Pallas (CPU validation) and the
-reference path, and exposes ``loops_sdd`` for the backward pass.
+Each kernel ships a pure-jnp oracle in ``ref.py`` and registers itself with
+the execution engine (``engine.py``) under a ``(part, op)`` key.  The engine
+is the one dispatch layer: it picks the backend (real-TPU Pallas,
+interpret-mode Pallas for CPU validation, or the jnp reference), owns the
+half-precision promotion rule, scatters traced ``vals=`` overrides into the
+static panel layout, and flattens any leading batch dims of the dense
+operand into the kernels' native batch grid dimension.  ``ops.py`` is a
+compatibility re-export of the engine's entry points.
 """
-from . import ops, ref
+from . import engine, ops, ref
 from .bcsr_spmm import bcsr_spmm_pallas
 from .csr_spmm import csr_spmm_pallas
 
-__all__ = ["ops", "ref", "bcsr_spmm_pallas", "csr_spmm_pallas"]
+__all__ = ["engine", "ops", "ref", "bcsr_spmm_pallas", "csr_spmm_pallas"]

@@ -23,6 +23,15 @@ from G scalar-prefetch-indexed row gathers with masked (padding-dropping)
 stores.  G = 1 degenerates to the historical rank-1-per-step kernel
 (``bcsr_spmm_pallas`` is that wrapper).
 
+Batched execution (multi-RHS)
+-----------------------------
+A rank-3 dense operand ``(batch, K, N)`` adds a leading batch-block grid
+axis: each grid step loads the static ``(Br, G)`` A panel ONCE, assembles
+``bz`` B panels (one per batch slice) in scratch, and issues one batched
+``(bz, Br, G) @ (bz, G, bn)`` MXU contraction — ``bz`` independent matmuls
+sharing the A operand.  Grid steps grow by ``ceil(batch / bz)`` over the
+unbatched call.
+
 Precision (§3.3 FP16 path, Algorithm 3): the paper uses the 2-way widening
 ``fmopa`` (two f16 outer products into one f32 ZA tile) with vzip register
 shuffles.  The TPU MXU natively multiplies bf16 operands and accumulates in
@@ -31,11 +40,12 @@ half-in/single-accumulate contract without any shuffle — the packing is done
 by the hardware.  FP64 uses ``preferred_element_type=float64`` (lowered by
 XLA to VPU sequences on real TPUs, which have no f64 MXU mode).
 
-grid = (N // bn, P); ``panel_rows`` is nondecreasing so output-block
-revisiting is legal, exactly as in the CSR kernel.  ``carry`` +
-``row_block_offset`` support the fused single-pass ``loops_spmm``: the kernel
-writes its blocks at a row offset into a shared buffer whose other rows (the
-CSR part's) are preserved through ``input_output_aliases``.
+grid = (N // bn, P) (batched: (batch // bz, N // bn, P)); ``panel_rows`` is
+nondecreasing so output-block revisiting is legal, exactly as in the CSR
+kernel.  ``carry`` + ``row_block_offset`` support the fused single-pass
+``loops_spmm``: the kernel writes its blocks at a row offset into a shared
+buffer whose other rows (the CSR part's) are preserved through
+``input_output_aliases``.
 """
 from __future__ import annotations
 
@@ -46,36 +56,51 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .panel_common import first_last, panel_operands, split_panel_refs
-from .ref import acc_dtype_for
+from .engine import batch_block, register_kernel, resolve_dtypes
+from .panel_common import (first_last, grid_dims, panel_operands,
+                           split_panel_refs)
 
 __all__ = ["bcsr_spmm_pallas", "bcsr_panels_spmm_pallas"]
 
 
-def _panel_kernel(g: int, has_carry: bool, *refs):
-    """One grid step: gather G rows of B into scratch, one (Br,G)@(G,bn)."""
+def _panel_kernel(g: int, has_carry: bool, bz: int | None, *refs):
+    """One grid step: gather G rows of B into scratch, one (Br,G)@(G,bn)
+    MXU contraction (``bz`` of them, sharing the A panel, when batched)."""
     rows_ref, _, vals_ref, mask_ref, b_refs, (o_ref, bpan_ref, acc_ref) = \
         split_panel_refs(refs, g, has_carry)
-    first, last = first_last(rows_ref)
+    first, last = first_last(rows_ref, panel_axis=1 if bz is None else 2)
 
     @pl.when(first)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    # Masked gather: assemble the (G, bn) B panel in VMEM scratch, zeroing
+    # Masked gather: assemble the (G, bn) B panel(s) in VMEM scratch, zeroing
     # padding lanes (panels shorter than G at block-row boundaries).
     for i, b_ref in enumerate(b_refs):
-        row = b_ref[...].astype(bpan_ref.dtype)
-        bpan_ref[i, :] = jnp.where(mask_ref[0, i] > 0, row,
-                                   jnp.zeros_like(row))[0]
+        if bz is None:
+            row = b_ref[...].astype(bpan_ref.dtype)      # (1, bn)
+            bpan_ref[i, :] = jnp.where(mask_ref[0, i] > 0, row,
+                                       jnp.zeros_like(row))[0]
+        else:
+            row = b_ref[...][:, 0, :].astype(bpan_ref.dtype)  # (bz, bn)
+            bpan_ref[:, i, :] = jnp.where(mask_ref[0, i] > 0, row,
+                                          jnp.zeros_like(row))
 
-    # One real MXU matmul per grid step: G batched fmopa rounds (Figure 2)
-    # instead of a chain of rank-1 (Br,1)@(1,bn) updates.  For bf16 the MXU
-    # widens to fp32 in hardware (2-way fmopa equivalent).
+    # One real MXU contraction per grid step: G batched fmopa rounds
+    # (Figure 2) instead of a chain of rank-1 (Br,1)@(1,bn) updates.  For
+    # bf16 the MXU widens to fp32 in hardware (2-way fmopa equivalent).
     a_panel = vals_ref[0]        # (Br, G)
-    acc_ref[...] += jax.lax.dot_general(
-        a_panel, bpan_ref[...], (((1,), (0,)), ((), ())),
-        preferred_element_type=acc_ref.dtype)
+    if bz is None:
+        acc_ref[...] += jax.lax.dot_general(
+            a_panel, bpan_ref[...], (((1,), (0,)), ((), ())),
+            preferred_element_type=acc_ref.dtype)
+    else:
+        # The A panel is shared across the bz batch slices: broadcast it and
+        # contract batch-wise — (bz, Br, G) @ (bz, G, bn) -> (bz, Br, bn).
+        a_b = jnp.broadcast_to(a_panel, (bz,) + a_panel.shape)
+        acc_ref[...] += jax.lax.dot_general(
+            a_b, bpan_ref[...], (((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=acc_ref.dtype)
 
     @pl.when(last)
     def _flush():
@@ -101,7 +126,8 @@ def bcsr_panels_spmm_pallas(panel_rows: jax.Array, panel_cols: jax.Array,
       panel_cols: (P, G) int32 gather rows of ``b`` per panel lane.
       panel_vals: (P, Br, G) stacked tile values (zero columns = padding).
       panel_mask: (P, G) lane validity (1 real / 0 padding), vals dtype.
-      b:          (K, N) dense operand.
+      b:          (K, N) dense operand, or (batch, K, N) for the native
+                  batched grid (one kernel call serves every slice).
       nblocks:    number of block-rows (static).
       row_block_offset: first output block-row this kernel writes (static;
                   the fused path sets it to ``r_boundary // Br``).
@@ -109,40 +135,58 @@ def bcsr_panels_spmm_pallas(panel_rows: jax.Array, panel_cols: jax.Array,
                   ``(row_block_offset + nblocks) * Br``.
       bn:         B/accumulator column width per visit (multi-ZA-tile
                   factor); defaults to min(N, 512) = 4 lane tiles.
-      carry:      optional (out_rows, N) array aliased into the output; rows
-                  not visited here keep its contents (fused single-pass mode).
+      carry:      optional (..., out_rows, N) array aliased into the output;
+                  rows not visited here keep its contents (fused mode).
     """
+    if b.ndim not in (2, 3):
+        raise ValueError(f"b must be (K, N) or (batch, K, N); got rank "
+                         f"{b.ndim}")
     npanels, br, g = panel_vals.shape
-    n = b.shape[1]
+    n = b.shape[-1]
     bn = bn or min(n, 512)
     if n % bn:
         raise ValueError(f"N={n} not divisible by bn={bn}")
-    acc_dtype = acc_dtype_for(panel_vals.dtype)
-    out_dtype = out_dtype or acc_dtype
+    acc_dtype, out_dtype = resolve_dtypes(panel_vals.dtype, out_dtype)
     out_rows = out_rows or (row_block_offset + nblocks) * br
     has_carry = carry is not None
+    batch = b.shape[0] if b.ndim == 3 else None
+    bz = batch_block(batch) if batch is not None else 0
+    grid, _ = grid_dims(batch=batch, bz=bz, n=n, bn=bn, npanels=npanels)
 
-    def _rows(j, k, rows, cols):
+    def _rows(rows, k, j):
         return (row_block_offset + rows[k], j)
 
     in_specs, args, aliases = panel_operands(
-        g=g, bn=bn,
-        vals_spec=pl.BlockSpec((1, br, g), lambda j, k, rows, cols: (k, 0, 0)),
-        vals=panel_vals, mask=panel_mask, b=b,
-        carry=carry, carry_spec=pl.BlockSpec((br, bn), _rows))
+        g=g, bn=bn, vals_block=(1, br, g), vals=panel_vals, mask=panel_mask,
+        b=b, carry=carry, carry_block=(br, bn), row_map=_rows,
+        bz=None if batch is None else bz)
+
+    if batch is None:
+        out_specs = pl.BlockSpec((br, bn),
+                                 lambda j, k, rows, cols: _rows(rows, k, j))
+        out_shape = jax.ShapeDtypeStruct((out_rows, n), out_dtype)
+        scratch = [pltpu.VMEM((g, bn), b.dtype),        # B panel
+                   pltpu.VMEM((br, bn), acc_dtype)]     # accumulator
+    else:
+        out_specs = pl.BlockSpec(
+            (bz, br, bn),
+            lambda z, j, k, rows, cols: (z,) + _rows(rows, k, j))
+        out_shape = jax.ShapeDtypeStruct((batch, out_rows, n), out_dtype)
+        scratch = [pltpu.VMEM((bz, g, bn), b.dtype),    # B panels
+                   pltpu.VMEM((bz, br, bn), acc_dtype)]
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,  # panel_rows, panel_cols
-        grid=(n // bn, npanels),
+        grid=grid,
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((br, bn), _rows),
-        scratch_shapes=[pltpu.VMEM((g, bn), b.dtype),       # B panel
-                        pltpu.VMEM((br, bn), acc_dtype)],   # accumulator
+        out_specs=out_specs,
+        scratch_shapes=scratch,
     )
     return pl.pallas_call(
-        functools.partial(_panel_kernel, g, has_carry),
+        functools.partial(_panel_kernel, g, has_carry,
+                          None if batch is None else bz),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((out_rows, n), out_dtype),
+        out_shape=out_shape,
         input_output_aliases=aliases,
         interpret=interpret,
     )(panel_rows, panel_cols, *args)
@@ -157,7 +201,7 @@ def bcsr_spmm_pallas(tile_rows: jax.Array, tile_cols: jax.Array,
                      interpret: bool = True) -> jax.Array:
     """Flat-array entry point: one tile per panel (G = 1, rank-1 updates).
 
-    Returns the padded (nblocks * Br, N) result.  Format-level callers
+    Returns the padded (..., nblocks * Br, N) result.  Format-level callers
     should prefer :func:`bcsr_panels_spmm_pallas` with a host-packed
     ``PanelBCSR`` for real G-wide matmul panels.
     """
@@ -167,3 +211,7 @@ def bcsr_spmm_pallas(tile_rows: jax.Array, tile_cols: jax.Array,
         tile_vals.reshape(ntiles, br, 1), jnp.ones((ntiles, 1),
                                                    tile_vals.dtype),
         b, nblocks=nblocks, bn=bn, out_dtype=out_dtype, interpret=interpret)
+
+
+register_kernel("bcsr", "spmm", "panels", bcsr_panels_spmm_pallas)
+register_kernel("bcsr", "spmm", "flat", bcsr_spmm_pallas)

@@ -19,18 +19,29 @@ steps — the TPU analogue of batching several fmopa rounds per ZA-tile visit.
 G = 1 with a trivial mask reproduces the historical one-nonzero-per-step
 kernel exactly (``csr_spmm_pallas`` is that wrapper).
 
+Batched execution (multi-RHS)
+-----------------------------
+A rank-3 dense operand ``(batch, K, N)`` adds a leading batch-block grid
+axis: each grid step loads A's ``(1, G)`` panel metadata ONCE and applies it
+to ``bz`` batch slices (``repro.kernels.engine.batch_block``) of B at a
+time, producing a ``(bz, 1, bn)`` output block per step.  Grid steps grow by
+``ceil(batch / bz)`` — not ``batch`` — over the unbatched call, which is
+what lets one batched engine call replace a per-element Python loop.
+
 Implementation notes
 --------------------
-* grid = (N // bn, P): the inner grid dimension walks panels in (row, col)
-  order; the *output* BlockSpec index_map scatters to ``panel_rows[p]`` which
-  is nondecreasing, so Pallas legally keeps the current output block resident
-  in VMEM across consecutive grid steps of the same row (the TPU analogue of
-  keeping the NEON accumulator registers live across a row).
+* grid = (N // bn, P) (batched: (batch // bz, N // bn, P)): the innermost
+  grid dimension walks panels in (row, col) order; the *output* BlockSpec
+  index_map scatters to ``panel_rows[p]`` which is nondecreasing, so Pallas
+  legally keeps the current output block resident in VMEM across consecutive
+  grid steps of the same row (the TPU analogue of keeping the NEON
+  accumulator registers live across a row).
 * ``panel_rows``/``panel_cols`` arrive via scalar prefetch (SMEM) so the B-row
   gathers are expressed in BlockSpec index_maps — the standard Pallas-TPU
   sparse-gather idiom; the DMAs for step k+1 overlap with compute of step k.
 * Accumulation runs in fp32 scratch for {bf16, f16} inputs (f16f16f32
-  contract) and in the native dtype for f32/f64.
+  contract) and in the native dtype for f32/f64 — the shared promotion
+  helper ``repro.kernels.engine.resolve_dtypes``.
 * every output row must appear in ``panel_rows`` at least once (format layer
   guarantees this via >= 1 panel per row) or its block would be left
   uninitialised on real hardware.
@@ -48,17 +59,20 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .panel_common import first_last, panel_operands, split_panel_refs
-from .ref import acc_dtype_for
+from .engine import batch_block, register_kernel, resolve_dtypes
+from .panel_common import (first_last, grid_dims, panel_operands,
+                           split_panel_refs)
 
 __all__ = ["csr_spmm_pallas", "csr_panels_spmm_pallas"]
 
 
-def _panel_kernel(g: int, has_carry: bool, *refs):
-    """One grid step: masked gather of G rows of B, multiply-reduce over G."""
+def _panel_kernel(g: int, has_carry: bool, bz: int | None, *refs):
+    """One grid step: masked gather of G rows of B, multiply-reduce over G
+    into the resident accumulator (``bz`` batch slices at once when
+    batched)."""
     rows_ref, _, vals_ref, mask_ref, b_refs, (o_ref, acc_ref) = \
         split_panel_refs(refs, g, has_carry)
-    first, last = first_last(rows_ref)
+    first, last = first_last(rows_ref, panel_axis=1 if bz is None else 2)
 
     @pl.when(first)
     def _init():
@@ -71,14 +85,17 @@ def _panel_kernel(g: int, has_carry: bool, *refs):
     acc = acc_ref[...]
     for i, b_ref in enumerate(b_refs):
         v = vals_ref[0, i].astype(acc_ref.dtype)
-        contrib = v * b_ref[...].astype(acc_ref.dtype)  # AXPY over N lanes
+        row = b_ref[...] if bz is None else b_ref[...][:, 0, :]
+        contrib = v * row.astype(acc_ref.dtype)  # AXPY over N lanes
         acc = acc + jnp.where(mask_ref[0, i] > 0, contrib,
                               jnp.zeros_like(contrib))
     acc_ref[...] = acc
 
     @pl.when(last)
     def _flush():
-        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+        out = acc_ref[...]
+        o_ref[...] = (out if bz is None else out[:, None, :]).astype(
+            o_ref.dtype)
 
 
 @functools.partial(
@@ -97,7 +114,8 @@ def csr_panels_spmm_pallas(panel_rows: jax.Array, panel_cols: jax.Array,
       panel_cols: (P, G) int32 gather rows of ``b`` per panel lane.
       panel_vals: (P, G) values (0 on padding lanes).
       panel_mask: (P, G) lane validity (1 real / 0 padding), vals dtype.
-      b:          (K, N) dense operand.
+      b:          (K, N) dense operand, or (batch, K, N) for the native
+                  batched grid (one kernel call serves every slice).
       nrows:      logical output row count this kernel writes (static).
       out_rows:   total rows of the returned array (>= nrows; rows beyond
                   ``nrows`` are the fused path's BCSR territory).  Defaults
@@ -105,40 +123,57 @@ def csr_panels_spmm_pallas(panel_rows: jax.Array, panel_cols: jax.Array,
       bn:         dense-column block width; defaults to min(N, 512) — the wide
                   block is the column-direction analogue of the paper's
                   multi-tile trick (several 128-lane tiles per visit).
-      carry:      optional (out_rows, N) array aliased into the output; rows
-                  not visited here keep its contents (fused single-pass mode).
+      carry:      optional (..., out_rows, N) array aliased into the output;
+                  rows not visited here keep its contents (fused mode).
       interpret:  run the Pallas interpreter (CPU validation); False on TPU.
     """
+    if b.ndim not in (2, 3):
+        raise ValueError(f"b must be (K, N) or (batch, K, N); got rank "
+                         f"{b.ndim}")
     npanels, g = panel_cols.shape
-    n = b.shape[1]
+    n = b.shape[-1]
     bn = bn or min(n, 512)
     if n % bn:
         raise ValueError(f"N={n} not divisible by bn={bn}")
-    acc_dtype = acc_dtype_for(panel_vals.dtype)
-    out_dtype = out_dtype or acc_dtype
+    acc_dtype, out_dtype = resolve_dtypes(panel_vals.dtype, out_dtype)
     out_rows = out_rows or nrows
     has_carry = carry is not None
+    batch = b.shape[0] if b.ndim == 3 else None
+    bz = batch_block(batch) if batch is not None else 0
+    grid, _ = grid_dims(batch=batch, bz=bz, n=n, bn=bn, npanels=npanels)
 
-    def _rows(j, k, rows, cols):
+    def _rows(rows, k, j):
         return (rows[k], j)
 
     in_specs, args, aliases = panel_operands(
-        g=g, bn=bn,
-        vals_spec=pl.BlockSpec((1, g), lambda j, k, rows, cols: (k, 0)),
-        vals=panel_vals, mask=panel_mask, b=b,
-        carry=carry, carry_spec=pl.BlockSpec((1, bn), _rows))
+        g=g, bn=bn, vals_block=(1, g), vals=panel_vals, mask=panel_mask,
+        b=b, carry=carry, carry_block=(1, bn), row_map=_rows,
+        bz=None if batch is None else bz)
+
+    if batch is None:
+        out_specs = pl.BlockSpec((1, bn),
+                                 lambda j, k, rows, cols: _rows(rows, k, j))
+        out_shape = jax.ShapeDtypeStruct((out_rows, n), out_dtype)
+        acc_shape = (1, bn)
+    else:
+        out_specs = pl.BlockSpec(
+            (bz, 1, bn),
+            lambda z, j, k, rows, cols: (z,) + _rows(rows, k, j))
+        out_shape = jax.ShapeDtypeStruct((batch, out_rows, n), out_dtype)
+        acc_shape = (bz, bn)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,  # panel_rows, panel_cols
-        grid=(n // bn, npanels),
+        grid=grid,
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((1, bn), _rows),
-        scratch_shapes=[pltpu.VMEM((1, bn), acc_dtype)],
+        out_specs=out_specs,
+        scratch_shapes=[pltpu.VMEM(acc_shape, acc_dtype)],
     )
     return pl.pallas_call(
-        functools.partial(_panel_kernel, g, has_carry),
+        functools.partial(_panel_kernel, g, has_carry,
+                          None if batch is None else bz),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((out_rows, n), out_dtype),
+        out_shape=out_shape,
         input_output_aliases=aliases,
         interpret=interpret,
     )(panel_rows, panel_cols, *args)
@@ -162,3 +197,7 @@ def csr_spmm_pallas(row_ids: jax.Array, col_idx: jax.Array, vals: jax.Array,
         row_ids, col_idx.reshape(nnz, 1), vals.reshape(nnz, 1),
         jnp.ones((nnz, 1), vals.dtype), b, nrows=nrows, bn=bn,
         out_dtype=out_dtype, interpret=interpret)
+
+
+register_kernel("csr", "spmm", "panels", csr_panels_spmm_pallas)
+register_kernel("csr", "spmm", "flat", csr_spmm_pallas)

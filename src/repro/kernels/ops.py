@@ -1,211 +1,18 @@
-"""jit'd dispatch wrappers over the LOOPS Pallas kernels.
+"""Compatibility shim over :mod:`repro.kernels.engine`.
 
-``ops`` is the layer the rest of the framework calls: it accepts the host-side
-format dataclasses (``repro.core.formats``), moves arrays to device, picks the
-execution backend (Pallas-on-TPU, Pallas-interpret on CPU for validation, or
-the pure-jnp reference), and handles precision promotion.
-
-The Pallas backends execute G-wide panels when the caller supplies them
-(``panels=``, from ``LoopsFormat.csr_panels``/``bcsr_panels``); otherwise they
-fall back to the flat G=1 layout.  ``loops_spmm_fused`` is the single-pass
-hybrid: both kernels write disjoint row ranges of one preallocated buffer via
-``input_output_aliases`` + offset index_maps, so the output is produced with
-no ``concatenate`` copy.
-
-Autodiff support (two levers consumed by ``repro.core.spmm``'s custom VJP):
-
-  * every forward entry point takes an optional ``vals``/``*_vals`` override
-    — *traced* value arrays scattered into the static panel layout via the
-    panels' ``src_panel``/``src_lane`` maps — so learned-sparse-weight
-    layers execute (and re-execute, in the backward ``dB = Aᵀ·dY`` pass)
-    the exact same kernels with live parameters;
-  * ``loops_sdd`` dispatches the sampled dense-dense kernels
-    (``repro.kernels.spmm_sdd``) that produce the gradient of A's stored
-    values without ever materialising ``dY @ Bᵀ``.
+This module used to hold six near-duplicate dispatch entry points —
+``csr_spmm``, ``bcsr_spmm``, ``loops_spmm_fused``, ``loops_sdd`` and the
+``vals=``-override variants threaded through each, every one re-implementing
+backend selection, precision promotion and the panel-value scatter.  That
+logic now lives once in the registry-driven execution engine
+(``kernels/engine.py``), which also adds the native batched ``(..., K, N)``
+dense-operand contract; the names below are re-exports kept so existing
+imports (``from repro.kernels import ops``) keep working.
 """
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-
-from . import ref
-from .bcsr_spmm import bcsr_panels_spmm_pallas, bcsr_spmm_pallas
-from .csr_spmm import csr_panels_spmm_pallas, csr_spmm_pallas
-from .spmm_sdd import bcsr_sdd_panels_pallas, csr_sdd_panels_pallas
+from .engine import (bcsr_spmm, csr_spmm, default_backend,  # noqa: F401
+                     loops_sdd, loops_spmm_fused)
 
 __all__ = ["csr_spmm", "bcsr_spmm", "loops_spmm_fused", "loops_sdd",
            "default_backend"]
-
-
-def default_backend() -> str:
-    """'pallas' on real TPUs, 'interpret' elsewhere (CPU validation), matching
-    the assignment contract: TPU is the target, interpret mode the oracle
-    runner."""
-    return "pallas" if jax.default_backend() == "tpu" else "interpret"
-
-
-def _panel_vals(panels, vals):
-    """Static host-packed panel values, or the traced scatter of ``vals``."""
-    if vals is None:
-        return jnp.asarray(panels.panel_vals)
-    return panels.scatter_values(jnp.asarray(vals))
-
-
-def csr_spmm(csr, b: jax.Array, *, backend: str | None = None,
-             bn: int | None = None, out_dtype=None, panels=None,
-             vals=None) -> jax.Array:
-    """SpMM of a ``repro.core.formats.CSR`` against dense ``b`` (K, N).
-
-    ``panels`` — a ``repro.core.formats.PanelCSR`` view of the same matrix —
-    routes the Pallas backends through the G-wide panel kernel (one masked
-    G-row gather + multiply-reduce per grid step instead of one nonzero).
-    ``vals`` — optional traced (nnz,) values replacing ``csr.vals`` (live
-    parameters of a learned-sparse layer); the structure stays static.
-    """
-    backend = backend or default_backend()
-    if backend == "jnp":
-        v = jnp.asarray(csr.vals) if vals is None else jnp.asarray(vals)
-        return ref.csr_spmm_ref(jnp.asarray(csr.row_ids),
-                                jnp.asarray(csr.col_idx),
-                                v, b, csr.nrows, out_dtype=out_dtype)
-    interpret = backend == "interpret"
-    if panels is not None:
-        return csr_panels_spmm_pallas(
-            jnp.asarray(panels.panel_rows), jnp.asarray(panels.panel_cols),
-            _panel_vals(panels, vals), jnp.asarray(panels.panel_mask),
-            b, nrows=csr.nrows, bn=bn, out_dtype=out_dtype,
-            interpret=interpret)
-    v = jnp.asarray(csr.vals) if vals is None else jnp.asarray(vals)
-    return csr_spmm_pallas(jnp.asarray(csr.row_ids), jnp.asarray(csr.col_idx),
-                           v, b, nrows=csr.nrows,
-                           bn=bn, out_dtype=out_dtype, interpret=interpret)
-
-
-def bcsr_spmm(bcsr, b: jax.Array, *, backend: str | None = None,
-              bn: int | None = None, out_dtype=None, panels=None,
-              vals=None) -> jax.Array:
-    """SpMM of a ``repro.core.formats.VectorBCSR`` against dense ``b``.
-
-    Returns the *logical* (bcsr.nrows, N) result (padding rows trimmed).
-    ``panels`` — a ``repro.core.formats.PanelBCSR`` — routes the Pallas
-    backends through the G-wide kernel (one (Br,G)@(G,bn) MXU matmul per
-    grid step instead of a rank-1 update).  ``vals`` — optional traced
-    (ntiles, Br) tile values replacing ``bcsr.tile_vals``.
-    """
-    backend = backend or default_backend()
-    if backend == "jnp":
-        v = jnp.asarray(bcsr.tile_vals) if vals is None else jnp.asarray(vals)
-        padded = ref.bcsr_spmm_ref(jnp.asarray(bcsr.tile_rows),
-                                   jnp.asarray(bcsr.tile_cols),
-                                   v, b, bcsr.nblocks, out_dtype=out_dtype)
-    elif panels is not None:
-        padded = bcsr_panels_spmm_pallas(
-            jnp.asarray(panels.panel_rows), jnp.asarray(panels.panel_cols),
-            _panel_vals(panels, vals), jnp.asarray(panels.panel_mask),
-            b, nblocks=panels.nblocks, bn=bn, out_dtype=out_dtype,
-            interpret=(backend == "interpret"))
-    else:
-        v = jnp.asarray(bcsr.tile_vals) if vals is None else jnp.asarray(vals)
-        padded = bcsr_spmm_pallas(jnp.asarray(bcsr.tile_rows),
-                                  jnp.asarray(bcsr.tile_cols),
-                                  v, b, nblocks=bcsr.nblocks, bn=bn,
-                                  out_dtype=out_dtype,
-                                  interpret=(backend == "interpret"))
-    return padded[:bcsr.nrows]
-
-
-def loops_spmm_fused(fmt, b: jax.Array, *, backend: str | None = None,
-                     bn: int | None = None, out_dtype=None,
-                     csr_vals=None, bcsr_vals=None) -> jax.Array:
-    """Single-pass hybrid SpMM into ONE preallocated output.
-
-    Pass 1 (CSR panels) allocates the full ``(r_boundary + nblocks*Br, N)``
-    buffer and fills rows ``[0, r_boundary)``; pass 2 (BCSR panels) takes
-    that buffer as an aliased carry and fills the remaining blocks at
-    ``row_block_offset = r_boundary // Br`` — the pallas-level
-    ``input_output_aliases`` keeps pass 1's rows intact with zero copies.
-    No ``concatenate`` appears in the jaxpr; the only residual movement is
-    the final ``[:nrows]`` trim when the last block-row overhangs.
-
-    Requires both parts non-empty, panel views present, and ``r_boundary``
-    aligned to ``Br`` (planners guarantee the alignment; ``loops_spmm``
-    falls back to the two-output path otherwise).  ``csr_vals``/``bcsr_vals``
-    optionally substitute traced live values for the host-packed constants
-    — the aliasing is on the carry operand, so the fused single-pass shape
-    of the computation is identical either way.
-    """
-    backend = backend or default_backend()
-    if backend == "jnp":
-        raise ValueError("fused path is Pallas-only; use backend="
-                         "'interpret' or 'pallas'")
-    cp, bp = fmt.csr_panels, fmt.bcsr_panels
-    r_b, br = fmt.r_boundary, bp.br
-    if r_b % br or not 0 < r_b < fmt.nrows:
-        raise ValueError(f"fused path needs 0 < r_boundary < nrows with "
-                         f"r_boundary % Br == 0, got {r_b} (Br={br})")
-    interpret = backend == "interpret"
-    r_pad = r_b + bp.nblocks * br
-    out = csr_panels_spmm_pallas(
-        jnp.asarray(cp.panel_rows), jnp.asarray(cp.panel_cols),
-        _panel_vals(cp, csr_vals), jnp.asarray(cp.panel_mask),
-        b, nrows=r_b, out_rows=r_pad, bn=bn, out_dtype=out_dtype,
-        interpret=interpret)
-    out = bcsr_panels_spmm_pallas(
-        jnp.asarray(bp.panel_rows), jnp.asarray(bp.panel_cols),
-        _panel_vals(bp, bcsr_vals), jnp.asarray(bp.panel_mask),
-        b, nblocks=bp.nblocks, row_block_offset=r_b // br, out_rows=r_pad,
-        bn=bn, out_dtype=out_dtype, interpret=interpret, carry=out)
-    return out if r_pad == fmt.nrows else out[:fmt.nrows]
-
-
-def loops_sdd(fmt, dy: jax.Array, b: jax.Array, *,
-              backend: str | None = None, bn: int | None = None):
-    """Gradient of ``Y = A @ B`` w.r.t. A's stored values (both parts).
-
-    Args:
-      fmt: the forward :class:`~repro.core.formats.LoopsFormat` (structure
-        source — its value arrays are not read).
-      dy:  (nrows, N) output cotangent.
-      b:   (K, N) the forward dense operand.
-    Returns:
-      ``(d_csr_vals, d_bcsr_tile_vals)`` with shapes ``(nnz_csr,)`` and
-      ``(ntiles, Br)`` in the accumulation dtype (callers cast back to the
-      parameter dtype).  Pallas backends run the G-wide SDD kernels
-      (``repro.kernels.spmm_sdd``); the jnp backend runs the gather-based
-      references — both sample ``dY @ Bᵀ`` only at stored coordinates.
-    """
-    backend = backend or default_backend()
-    csr, bc = fmt.csr_part, fmt.bcsr_part
-    nblocks, br = bc.nblocks, bc.br
-    acc = ref.acc_dtype_for(b.dtype)
-    has_csr = fmt.r_boundary > 0
-    has_bcsr = fmt.r_boundary < fmt.nrows
-    # BCSR region of the cotangent, zero-padded to whole blocks: rows the
-    # forward pass trims carry exactly zero gradient.
-    dy_b = dy[fmt.r_boundary:]
-    pad = nblocks * br - dy_b.shape[0]
-    dy_pad = jnp.pad(dy_b, ((0, pad), (0, 0))) if pad else dy_b
-    if backend == "jnp":
-        d_csr = ref.csr_sdd_ref(jnp.asarray(csr.row_ids),
-                                jnp.asarray(csr.col_idx), dy, b) \
-            if has_csr else jnp.zeros((csr.nnz,), acc)
-        d_bcsr = ref.bcsr_sdd_ref(jnp.asarray(bc.tile_rows),
-                                  jnp.asarray(bc.tile_cols), dy_pad, b,
-                                  nblocks) \
-            if has_bcsr else jnp.zeros(bc.tile_vals.shape, acc)
-        return d_csr, d_bcsr
-    interpret = backend == "interpret"
-    cp, bp = fmt.csr_panels, fmt.bcsr_panels
-    if has_csr:
-        d_csr = cp.gather_values(csr_sdd_panels_pallas(
-            jnp.asarray(cp.panel_rows), jnp.asarray(cp.panel_cols), dy, b,
-            bn=bn, interpret=interpret))
-    else:
-        d_csr = jnp.zeros((csr.nnz,), acc)
-    if has_bcsr:
-        d_bcsr = bp.gather_values(bcsr_sdd_panels_pallas(
-            jnp.asarray(bp.panel_rows), jnp.asarray(bp.panel_cols), dy_pad,
-            b, br=br, bn=bn, interpret=interpret))
-    else:
-        d_bcsr = jnp.zeros(bc.tile_vals.shape, acc)
-    return d_csr, d_bcsr

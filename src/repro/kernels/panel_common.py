@@ -6,13 +6,22 @@ train ``[panel_vals, panel_mask, carry?, B x G]``, then outputs and scratch.
 The operand ORDER is load-bearing — ``input_output_aliases`` is positional —
 so it is defined here exactly once and both kernels assemble their specs and
 unpack their refs through these helpers.
+
+Batched execution: when the dense operand carries a leading batch dimension
+``(batch, K, N)``, the grid gains a leading batch-block axis and every
+tensor BlockSpec gains a leading ``bz``-wide block dimension (``bz`` batch
+slices per grid step, :func:`repro.kernels.engine.batch_block`).  The
+scalar-prefetch panel metadata is shared across the batch — A's static
+panel layout is loaded once per grid step and applied to all ``bz``
+slices.  ``grid_dims`` centralises the two grid layouts so the kernels'
+``first``/``last`` revisit predicates can never disagree with the specs.
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["CARRY_OPERAND_INDEX", "first_last", "panel_operands",
+__all__ = ["CARRY_OPERAND_INDEX", "first_last", "grid_dims", "panel_operands",
            "split_panel_refs"]
 
 # Position of the fused-path carry among ALL pallas_call operands (scalar
@@ -20,11 +29,21 @@ __all__ = ["CARRY_OPERAND_INDEX", "first_last", "panel_operands",
 CARRY_OPERAND_INDEX = 4
 
 
-def first_last(rows_ref):
+def grid_dims(*, batch: int | None, bz: int, n: int, bn: int, npanels: int):
+    """``(grid, panel_axis)`` for a panel kernel: the panel axis is always
+    innermost (the accumulator-revisit protocol needs all panels of a row
+    consecutive); batched calls prepend a batch-block axis."""
+    if batch is None:
+        return (n // bn, npanels), 1
+    return (batch // bz, n // bn, npanels), 2
+
+
+def first_last(rows_ref, panel_axis: int = 1):
     """(first, last) predicates for the nondecreasing-row revisit protocol:
-    does the inner grid step ``k`` open / close its output row's visit?"""
-    k = pl.program_id(1)
-    npanels = pl.num_programs(1)
+    does the inner grid step ``k`` (on ``panel_axis``) open / close its
+    output row's visit?"""
+    k = pl.program_id(panel_axis)
+    npanels = pl.num_programs(panel_axis)
     row_here = rows_ref[k]
     row_prev = rows_ref[jnp.maximum(k - 1, 0)]
     row_next = rows_ref[jnp.minimum(k + 1, npanels - 1)]
@@ -44,25 +63,57 @@ def split_panel_refs(refs, g: int, has_carry: bool):
     return rows_ref, cols_ref, vals_ref, mask_ref, rest[:g], rest[g:]
 
 
-def panel_operands(*, g: int, bn: int, vals_spec, vals, mask, b,
-                   carry=None, carry_spec=None):
+def panel_operands(*, g: int, bn: int, vals_block, vals, mask, b,
+                   carry=None, carry_block=None, row_map=None,
+                   bz: int | None = None):
     """Assemble the tensor-operand train shared by both panel kernels.
 
+    Args:
+      vals_block:  block shape of the panel-values operand ((1, g) for CSR,
+                   (1, br, g) for BCSR) — indexed ``(k, 0, ...)`` on the
+                   panel axis regardless of batching.
+      row_map:     ``row_index(rows, k, j)`` → the (row-ish, col) block
+                   index of the carry/output; used to build the carry spec.
+      bz:          batch slices per grid step, or None for the unbatched
+                   2-D layout.
+
     Returns ``(in_specs, args, input_output_aliases)``: vals and the
-    ``(1, G)`` mask, the optional aliased carry, then G independent
-    ``(1, bn)`` gathers of ``b`` indexed by the scalar-prefetched
-    ``panel_cols`` — one DMA stream per panel lane.
+    ``(1, G)`` mask, the optional aliased carry, then G gathers of ``b``
+    indexed by the scalar-prefetched ``panel_cols`` — one DMA stream per
+    panel lane, ``bz`` batch slices wide when batched.
     """
-    in_specs = [vals_spec,
-                pl.BlockSpec((1, g), lambda j, k, rows, cols: (k, 0))]
+    vals_index = (0,) * (len(vals_block) - 1)
+    if bz is None:
+        def _meta(block):
+            return pl.BlockSpec(block, lambda j, k, rows, cols:
+                                (k,) + vals_index)
+        mask_spec = pl.BlockSpec((1, g), lambda j, k, rows, cols: (k, 0))
+        b_specs = [
+            pl.BlockSpec((1, bn), lambda j, k, rows, cols, i=i:
+                         (cols[k, i], j))
+            for i in range(g)]
+        carry_spec = carry_block and pl.BlockSpec(
+            carry_block, lambda j, k, rows, cols: row_map(rows, k, j))
+    else:
+        def _meta(block):
+            return pl.BlockSpec(block, lambda z, j, k, rows, cols:
+                                (k,) + vals_index)
+        mask_spec = pl.BlockSpec((1, g), lambda z, j, k, rows, cols: (k, 0))
+        b_specs = [
+            pl.BlockSpec((bz, 1, bn), lambda z, j, k, rows, cols, i=i:
+                         (z, cols[k, i], j))
+            for i in range(g)]
+        carry_spec = carry_block and pl.BlockSpec(
+            (bz,) + tuple(carry_block),
+            lambda z, j, k, rows, cols: (z,) + row_map(rows, k, j))
+
+    in_specs = [_meta(vals_block), mask_spec]
     args = [vals, mask]
     aliases = {}
     if carry is not None:
         in_specs.append(carry_spec)
         args.append(carry)
         aliases = {CARRY_OPERAND_INDEX: 0}
-    in_specs.extend(
-        pl.BlockSpec((1, bn), lambda j, k, rows, cols, i=i: (cols[k, i], j))
-        for i in range(g))
+    in_specs.extend(b_specs)
     args.extend([b] * g)
     return in_specs, args, aliases

@@ -5,29 +5,41 @@ and sparsity patterns) and the fallback execution path on backends without
 Pallas support.  They also stand in for the paper's CPU baselines:
 ``csr_spmm_ref`` is the TACO-style row-wise CSR schedule and ``dense_spmm``
 is the Armadillo-style dense product.
+
+Every oracle accepts the engine's batched shape contract ``(..., K, N)``:
+leading dims are folded through ``jax.vmap`` (one XLA computation — a
+batched oracle, not a Python loop), and the SDD oracles sum the batch, the
+shared-values cotangent contract of the backward pass.
+
+``acc_dtype_for`` is re-exported from :mod:`repro.kernels.engine` — the
+single home of the ``{bf16, f16} → fp32-accumulate`` promotion rule.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from .engine import acc_dtype_for, register_kernel
+
 __all__ = ["csr_spmm_ref", "bcsr_spmm_ref", "csr_sdd_ref", "bcsr_sdd_ref",
            "dense_spmm", "acc_dtype_for"]
 
 
-def acc_dtype_for(dtype) -> jnp.dtype:
-    """fp32 accumulation for half precision (the paper's f16f16f32 contract,
-    realised on TPU as the native bf16xbf16->f32 MXU mode); otherwise the
-    input precision.  Canonicalised so f64 degrades to f32 when x64 is off."""
-    dtype = jax.dtypes.canonicalize_dtype(jnp.dtype(dtype))
-    if dtype in (jnp.bfloat16, jnp.float16):
-        return jnp.dtype(jnp.float32)
-    return dtype
+def _map_batch(fn, b):
+    """Apply a (K, N)-operand oracle over the leading batch dims of ``b``
+    as one vmapped XLA computation."""
+    lead = b.shape[:-2]
+    flat = b.reshape((-1,) + b.shape[-2:])
+    out = jax.vmap(fn)(flat)
+    return out.reshape(lead + out.shape[-2:])
 
 
 def csr_spmm_ref(row_ids: jax.Array, col_idx: jax.Array, vals: jax.Array,
                  b: jax.Array, nrows: int, out_dtype=None) -> jax.Array:
     """Row-wise CSR SpMM: C[r] = sum_{k in row r} vals[k] * B[col[k], :]."""
+    if b.ndim > 2:
+        return _map_batch(lambda bb: csr_spmm_ref(
+            row_ids, col_idx, vals, bb, nrows, out_dtype=out_dtype), b)
     acc = acc_dtype_for(vals.dtype)
     out_dtype = out_dtype or acc
     contrib = vals.astype(acc)[:, None] * b[col_idx].astype(acc)
@@ -42,9 +54,13 @@ def bcsr_spmm_ref(tile_rows: jax.Array, tile_cols: jax.Array,
 
         C[block p] = sum_{tile t in p} tile_vals[t] (x) B[tile_cols[t], :]
 
-    Returns the padded (nblocks * Br, N) result; callers trim to the logical
-    row count.
+    Returns the padded (..., nblocks * Br, N) result; callers trim to the
+    logical row count.
     """
+    if b.ndim > 2:
+        return _map_batch(lambda bb: bcsr_spmm_ref(
+            tile_rows, tile_cols, tile_vals, bb, nblocks,
+            out_dtype=out_dtype), b)
     acc = acc_dtype_for(tile_vals.dtype)
     out_dtype = out_dtype or acc
     br = tile_vals.shape[1]
@@ -61,9 +77,15 @@ def csr_sdd_ref(row_ids: jax.Array, col_idx: jax.Array, dy: jax.Array,
         dA[k] = dY[row_ids[k], :] · B[col_idx[k], :]
 
     — the per-nonzero gradient of ``Y = A @ B`` w.r.t. A's stored values
-    (``dY ⊙ B`` sampled on the sparsity pattern).  Returns (nnz,) in the
-    fp32-accumulating dtype.
+    (``dY ⊙ B`` sampled on the sparsity pattern), **summed over any batch
+    dims** (stored values are shared across the batch).  Returns (nnz,) in
+    the fp32-accumulating dtype.
     """
+    if b.ndim > 2:
+        flat_dy = dy.reshape((-1,) + dy.shape[-2:])
+        flat_b = b.reshape((-1,) + b.shape[-2:])
+        return jax.vmap(csr_sdd_ref, in_axes=(None, None, 0, 0))(
+            row_ids, col_idx, flat_dy, flat_b).sum(axis=0)
     acc = acc_dtype_for(b.dtype)
     return (dy[row_ids].astype(acc) * b[col_idx].astype(acc)).sum(axis=-1)
 
@@ -75,9 +97,15 @@ def bcsr_sdd_ref(tile_rows: jax.Array, tile_cols: jax.Array, dy_pad: jax.Array,
         dA[t, r] = dY[tile_rows[t]*Br + r, :] · B[tile_cols[t], :]
 
     ``dy_pad`` is the BCSR region of the cotangent padded to
-    ``nblocks * Br`` rows (trimmed forward rows carry zero cotangent).
-    Returns (ntiles, Br) in the fp32-accumulating dtype.
+    ``nblocks * Br`` rows (trimmed forward rows carry zero cotangent),
+    batch dims summed.  Returns (ntiles, Br) in the fp32-accumulating
+    dtype.
     """
+    if b.ndim > 2:
+        flat_dy = dy_pad.reshape((-1,) + dy_pad.shape[-2:])
+        flat_b = b.reshape((-1,) + b.shape[-2:])
+        return jax.vmap(bcsr_sdd_ref, in_axes=(None, None, 0, 0, None))(
+            tile_rows, tile_cols, flat_dy, flat_b, nblocks).sum(axis=0)
     acc = acc_dtype_for(b.dtype)
     br = dy_pad.shape[0] // nblocks
     blocks = dy_pad.reshape(nblocks, br, dy_pad.shape[1]).astype(acc)
@@ -90,3 +118,9 @@ def dense_spmm(a_dense: jax.Array, b: jax.Array, out_dtype=None) -> jax.Array:
     out_dtype = out_dtype or acc
     return jax.lax.dot(a_dense, b,
                        preferred_element_type=acc).astype(out_dtype)
+
+
+register_kernel("csr", "spmm", "ref", csr_spmm_ref)
+register_kernel("bcsr", "spmm", "ref", bcsr_spmm_ref)
+register_kernel("csr", "sdd", "ref", csr_sdd_ref)
+register_kernel("bcsr", "sdd", "ref", bcsr_sdd_ref)

@@ -23,8 +23,16 @@ The grid is ``(P, N // bn)`` with the *column* blocks innermost: each panel's
 accumulator stays resident in VMEM scratch while the N-reduction streams
 through, then flushes once — the transpose of the forward kernels' resident
 output block.  Padding lanes produce garbage that is never read: the callers
-(``repro.kernels.ops.loops_sdd``) gather only real slots via the panels'
+(``repro.kernels.engine.loops_sdd``) gather only real slots via the panels'
 ``src_panel``/``src_lane`` maps, so no in-kernel mask is needed.
+
+Batched execution (multi-RHS backward)
+--------------------------------------
+With rank-3 ``(batch, ..., N)`` cotangent/operand pairs the grid becomes
+``(P, batch // bz, N // bn)``: the stored values are shared across the
+batch, so their cotangent is the **batch sum**, which the kernels realise
+by folding the batch axis into the same resident accumulation the
+N-reduction already uses — ``bz`` slices per step, one flush per panel.
 
 Outputs are panel-layout ``(P, G)`` / ``(P, Br, G)`` arrays in the fp32
 accumulation dtype (the f16f16f32 contract of the forward kernels applies to
@@ -39,29 +47,45 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .ref import acc_dtype_for
+from .engine import acc_dtype_for, batch_block, register_kernel
 
 __all__ = ["csr_sdd_panels_pallas", "bcsr_sdd_panels_pallas"]
 
 
-def _csr_sdd_kernel(g: int, *refs):
+def _reduction_edges(bz: int | None):
+    """(first, last) predicates over the per-panel reduction axes — the
+    column blocks and, when batched, the batch blocks — shared by both SDD
+    kernels so init/flush can never disagree with the grid layout."""
+    if bz is None:
+        j = pl.program_id(1)
+        nb = pl.num_programs(1)
+        return j == 0, j == nb - 1
+    z, j = pl.program_id(1), pl.program_id(2)
+    nz, nb = pl.num_programs(1), pl.num_programs(2)
+    return jnp.logical_and(z == 0, j == 0), \
+        jnp.logical_and(z == nz - 1, j == nb - 1)
+
+
+def _csr_sdd_kernel(g: int, bz: int | None, *refs):
     """One grid step: G masked-free dot products dY[row]·B[col_i] into the
-    panel's (1, G) accumulator; flush after the last column block."""
+    panel's (1, G) accumulator (summed over batch slices when batched);
+    flush after the last reduction block."""
     _, _, dy_ref, *rest = refs
     b_refs, (o_ref, acc_ref) = rest[:g], rest[g:]
-    j = pl.program_id(1)
-    nb = pl.num_programs(1)
+    first, last = _reduction_edges(bz)
 
-    @pl.when(j == 0)
+    @pl.when(first)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    dy = dy_ref[...].astype(acc_ref.dtype)          # (1, bn)
+    dy = dy_ref[...].astype(acc_ref.dtype)       # (1, bn) or (bz, 1, bn)
+    # jnp.sum over every axis reduces the batch slices too — exactly the
+    # shared-values batch-sum contract of the backward pass.
     lanes = [jnp.sum(dy * b_ref[...].astype(acc_ref.dtype))[None]
              for b_ref in b_refs]
-    acc_ref[...] += jnp.stack(lanes, axis=-1)       # (1, g)
+    acc_ref[...] += jnp.stack(lanes, axis=-1)    # (1, g)
 
-    @pl.when(j == nb - 1)
+    @pl.when(last)
     def _flush():
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
@@ -76,60 +100,89 @@ def csr_sdd_panels_pallas(panel_rows: jax.Array, panel_cols: jax.Array,
     Args:
       panel_rows: (P,) int32 — cotangent row per panel (``PanelCSR`` order).
       panel_cols: (P, G) int32 — gather rows of ``b`` per lane.
-      dy:         (M, N) output cotangent (rows beyond the CSR region are
-                  simply never indexed).
-      b:          (K, N) the forward dense operand.
+      dy:         (M, N) output cotangent, or (batch, M, N) — batch summed
+                  (rows beyond the CSR region are simply never indexed).
+      b:          (K, N) or (batch, K, N) the forward dense operand.
     Returns:
       (P, G) gradients in the accumulation dtype; padding lanes undefined —
       gather real slots with ``PanelCSR.gather_values``.
     """
+    if dy.ndim != b.ndim or b.ndim not in (2, 3):
+        raise ValueError(f"dy/b must both be rank 2 or 3; got {dy.ndim} / "
+                         f"{b.ndim}")
     npanels, g = panel_cols.shape
-    n = b.shape[1]
+    n = b.shape[-1]
     bn = bn or min(n, 512)
     if n % bn:
         raise ValueError(f"N={n} not divisible by bn={bn}")
     acc_dtype = acc_dtype_for(b.dtype)
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,  # panel_rows, panel_cols
-        grid=(npanels, n // bn),
-        in_specs=[
+    batch = b.shape[0] if b.ndim == 3 else None
+    if batch is None:
+        grid = (npanels, n // bn)
+        bz = None
+        in_specs = [
             pl.BlockSpec((1, bn), lambda p, j, rows, cols: (rows[p], j)),
             *[pl.BlockSpec((1, bn),
                            lambda p, j, rows, cols, i=i: (cols[p, i], j))
               for i in range(g)],
-        ],
-        out_specs=pl.BlockSpec((1, g), lambda p, j, rows, cols: (p, 0)),
+        ]
+        out_specs = pl.BlockSpec((1, g), lambda p, j, rows, cols: (p, 0))
+    else:
+        bz = batch_block(batch)
+        grid = (npanels, batch // bz, n // bn)
+        in_specs = [
+            pl.BlockSpec((bz, 1, bn),
+                         lambda p, z, j, rows, cols: (z, rows[p], j)),
+            *[pl.BlockSpec((bz, 1, bn),
+                           lambda p, z, j, rows, cols, i=i: (z, cols[p, i], j))
+              for i in range(g)],
+        ]
+        out_specs = pl.BlockSpec((1, g), lambda p, z, j, rows, cols: (p, 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # panel_rows, panel_cols
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
         scratch_shapes=[pltpu.VMEM((1, g), acc_dtype)],
     )
     return pl.pallas_call(
-        functools.partial(_csr_sdd_kernel, g),
+        functools.partial(_csr_sdd_kernel, g, bz),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((npanels, g), acc_dtype),
         interpret=interpret,
     )(panel_rows, panel_cols, dy, *([b] * g))
 
 
-def _bcsr_sdd_kernel(g: int, *refs):
+def _bcsr_sdd_kernel(g: int, bz: int | None, *refs):
     """One grid step: gather the G B-rows into scratch, one (Br,bn)@(bn,G)
-    MXU contraction against the block-row's cotangent slab."""
+    MXU contraction against the block-row's cotangent slab (contracted over
+    the batch slices too when batched)."""
     _, _, dy_ref, *rest = refs
     b_refs, (o_ref, bpan_ref, acc_ref) = rest[:g], rest[g:]
-    j = pl.program_id(1)
-    nb = pl.num_programs(1)
+    first, last = _reduction_edges(bz)
 
-    @pl.when(j == 0)
+    @pl.when(first)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    for i, b_ref in enumerate(b_refs):
-        bpan_ref[i, :] = b_ref[...].astype(bpan_ref.dtype)[0]
+    if bz is None:
+        for i, b_ref in enumerate(b_refs):
+            bpan_ref[i, :] = b_ref[...].astype(bpan_ref.dtype)[0]
+        acc_ref[...] += jax.lax.dot_general(
+            dy_ref[...].astype(acc_ref.dtype), bpan_ref[...],
+            (((1,), (1,)), ((), ())),
+            preferred_element_type=acc_ref.dtype)       # (br, g)
+    else:
+        for i, b_ref in enumerate(b_refs):
+            bpan_ref[:, i, :] = b_ref[...][:, 0, :].astype(bpan_ref.dtype)
+        # (bz, br, bn) x (bz, g, bn) contracted over (batch, bn) -> (br, g):
+        # the batch axis joins the N-reduction, realising the batch sum.
+        acc_ref[...] += jax.lax.dot_general(
+            dy_ref[...].astype(acc_ref.dtype), bpan_ref[...],
+            (((0, 2), (0, 2)), ((), ())),
+            preferred_element_type=acc_ref.dtype)       # (br, g)
 
-    acc_ref[...] += jax.lax.dot_general(
-        dy_ref[...].astype(acc_ref.dtype), bpan_ref[...],
-        (((1,), (1,)), ((), ())),
-        preferred_element_type=acc_ref.dtype)       # (br, g)
-
-    @pl.when(j == nb - 1)
+    @pl.when(last)
     def _flush():
         o_ref[...] = acc_ref[...][None].astype(o_ref.dtype)
 
@@ -144,36 +197,65 @@ def bcsr_sdd_panels_pallas(panel_rows: jax.Array, panel_cols: jax.Array,
     Args:
       panel_rows: (P,) int32 — block-row per panel (``PanelBCSR`` order).
       panel_cols: (P, G) int32 — gather rows of ``b`` per lane.
-      dy_pad:     (nblocks * Br, N) — the BCSR region of the cotangent,
-                  zero-padded to full blocks (trimmed rows ⇒ zero grad).
-      b:          (K, N) the forward dense operand.
+      dy_pad:     (nblocks * Br, N) or (batch, nblocks * Br, N) — the BCSR
+                  region of the cotangent, zero-padded to full blocks
+                  (trimmed rows ⇒ zero grad); batch summed.
+      b:          (K, N) or (batch, K, N) the forward dense operand.
     Returns:
       (P, Br, G) gradients in the accumulation dtype; padding lanes
       undefined — gather real slots with ``PanelBCSR.gather_values``.
     """
+    if dy_pad.ndim != b.ndim or b.ndim not in (2, 3):
+        raise ValueError(f"dy_pad/b must both be rank 2 or 3; got "
+                         f"{dy_pad.ndim} / {b.ndim}")
     npanels, g = panel_cols.shape
-    n = b.shape[1]
+    n = b.shape[-1]
     bn = bn or min(n, 512)
     if n % bn:
         raise ValueError(f"N={n} not divisible by bn={bn}")
     acc_dtype = acc_dtype_for(b.dtype)
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,  # panel_rows, panel_cols
-        grid=(npanels, n // bn),
-        in_specs=[
+    batch = b.shape[0] if b.ndim == 3 else None
+    if batch is None:
+        bz = None
+        grid = (npanels, n // bn)
+        in_specs = [
             pl.BlockSpec((br, bn), lambda p, j, rows, cols: (rows[p], j)),
             *[pl.BlockSpec((1, bn),
                            lambda p, j, rows, cols, i=i: (cols[p, i], j))
               for i in range(g)],
-        ],
-        out_specs=pl.BlockSpec((1, br, g),
-                               lambda p, j, rows, cols: (p, 0, 0)),
-        scratch_shapes=[pltpu.VMEM((g, bn), acc_dtype),     # B panel
-                        pltpu.VMEM((br, g), acc_dtype)],    # accumulator
+        ]
+        out_specs = pl.BlockSpec((1, br, g),
+                                 lambda p, j, rows, cols: (p, 0, 0))
+        scratch = [pltpu.VMEM((g, bn), acc_dtype),      # B panel
+                   pltpu.VMEM((br, g), acc_dtype)]      # accumulator
+    else:
+        bz = batch_block(batch)
+        grid = (npanels, batch // bz, n // bn)
+        in_specs = [
+            pl.BlockSpec((bz, br, bn),
+                         lambda p, z, j, rows, cols: (z, rows[p], j)),
+            *[pl.BlockSpec((bz, 1, bn),
+                           lambda p, z, j, rows, cols, i=i: (z, cols[p, i], j))
+              for i in range(g)],
+        ]
+        out_specs = pl.BlockSpec((1, br, g),
+                                 lambda p, z, j, rows, cols: (p, 0, 0))
+        scratch = [pltpu.VMEM((bz, g, bn), acc_dtype),
+                   pltpu.VMEM((br, g), acc_dtype)]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # panel_rows, panel_cols
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        scratch_shapes=scratch,
     )
     return pl.pallas_call(
-        functools.partial(_bcsr_sdd_kernel, g),
+        functools.partial(_bcsr_sdd_kernel, g, bz),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((npanels, br, g), acc_dtype),
         interpret=interpret,
     )(panel_rows, panel_cols, dy_pad, *([b] * g))
+
+
+register_kernel("csr", "sdd", "panels", csr_sdd_panels_pallas)
+register_kernel("bcsr", "sdd", "panels", bcsr_sdd_panels_pallas)

@@ -82,13 +82,22 @@ def sparse_linear_apply(layer: SparseLinear, values: Params, x: jax.Array,
                         *, backend: str | None = None) -> jax.Array:
     """x: (..., d_in) -> (..., d_out) via LOOPS SpMM with live values.
 
+    A rank-2 activation ``(T, d_in)`` executes as the classic single SpMM
+    against ``xᵀ``; higher ranks ``(*batch, T, d_in)`` keep their batch
+    structure and ride the engine's native batched path — ONE kernel call
+    per weight regardless of the batch size, instead of flattening every
+    leading dim into the dense-column axis (which destroyed the batch
+    layout for downstream per-sequence consumers) or looping per element.
+
     Fully differentiable on every backend (``backend=None`` picks the real
     kernel path — 'pallas' on TPU, 'interpret' elsewhere): gradients flow to
     both the activation and the stored weight values through the custom VJP.
     """
     backend = backend or ops.default_backend()
-    lead = x.shape[:-1]
-    xt = x.reshape(-1, layer.d_in).T           # (d_in, T) dense operand B
+    vec = x.ndim == 1
+    xm = x[None] if vec else x                 # (..., T, d_in)
+    xt = jnp.swapaxes(xm, -1, -2)              # (..., d_in, T) dense operand
     y = loops_spmm_values(layer.fmt, values["csr_vals"], values["bcsr_vals"],
                           xt, backend=backend)
-    return y.T.reshape(*lead, layer.d_out).astype(x.dtype)
+    y = jnp.swapaxes(y, -1, -2)                # (..., T, d_out)
+    return (y[0] if vec else y).astype(x.dtype)

@@ -11,8 +11,8 @@ amortise one measurement sweep across millions of requests.
 from .api import (Tuner, autotune, default_cache, make_record,
                   plan_from_record, record_from_result, tune_suite)
 from .cache import CACHE_VERSION, CacheStats, PlanCache
-from .fingerprint import (Fingerprint, cache_key, feature_distance,
-                          fingerprint, loops_fingerprint)
+from .fingerprint import (Fingerprint, cache_key, effective_n_cols,
+                          feature_distance, fingerprint, loops_fingerprint)
 from .search import (SearchBudget, SearchResult, enumerate_plans,
                      measure_plan_gflops, prior_model, search)
 
@@ -20,7 +20,8 @@ __all__ = [
     "Tuner", "autotune", "default_cache", "tune_suite", "make_record",
     "plan_from_record", "record_from_result", "CACHE_VERSION", "CacheStats",
     "PlanCache",
-    "Fingerprint", "cache_key", "feature_distance", "fingerprint",
+    "Fingerprint", "cache_key", "effective_n_cols", "feature_distance",
+    "fingerprint",
     "loops_fingerprint", "SearchBudget", "SearchResult", "enumerate_plans",
     "measure_plan_gflops", "prior_model", "search",
 ]

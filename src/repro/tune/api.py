@@ -24,7 +24,8 @@ from ..core.formats import CSR, LoopsFormat, loops_from_csr
 from ..core.perf_model import QuadraticPerfModel
 from ..core.spmm import SpmmPlan
 from .cache import CACHE_VERSION, PlanCache
-from .fingerprint import Fingerprint, cache_key, fingerprint
+from .fingerprint import (Fingerprint, cache_key, effective_n_cols,
+                          fingerprint)
 from .search import SearchBudget, SearchResult, search
 
 __all__ = ["autotune", "tune_suite", "Tuner", "default_cache",
@@ -95,7 +96,8 @@ def plan_from_record(rec: Mapping, nrows: int) -> SpmmPlan:
                     panel_g=int(p.get("panel_g", 1)))
 
 
-def autotune(csr: CSR, *, n_cols: int = 32, backend: str = "jnp",
+def autotune(csr: CSR, *, n_cols: int = 32, rhs_shape=None,
+             backend: str = "jnp",
              total_workers: int = 8, cache: Optional[PlanCache] = None,
              model: Optional[QuadraticPerfModel] = None,
              budget: SearchBudget = SearchBudget(),
@@ -104,12 +106,21 @@ def autotune(csr: CSR, *, n_cols: int = 32, backend: str = "jnp",
     """Tune-or-fetch an execution plan for ``csr`` against an (ncols, n_cols)
     dense operand; returns the converted format plus the resolved plan.
 
+    ``rhs_shape`` — the full ``(..., K, N)`` shape of a (possibly batched)
+    dense operand — overrides ``n_cols`` with the *effective* column count
+    ``prod(batch) * N`` (:func:`repro.tune.fingerprint.effective_n_cols`)
+    and makes the search measure candidates against an operand of exactly
+    that shape, so batched workloads tune (and cache) the plan the batched
+    engine call will actually execute.
+
     On a cache hit (exact or near) only the Algorithm 1 conversion runs —
     no candidate is ever measured.  On a miss, :func:`repro.tune.search.search`
     spends its budget and the winner is persisted.
     """
     if cache is None:   # NB: not `cache or ...` — an empty PlanCache is falsy
         cache = default_cache()
+    if rhs_shape is not None:
+        n_cols = effective_n_cols(rhs_shape)
     fp = fingerprint(csr)
     dt = np.dtype(csr.vals.dtype)
     key = cache_key(fp, n_cols=n_cols, dtype=dt, backend=backend)
@@ -126,7 +137,8 @@ def autotune(csr: CSR, *, n_cols: int = 32, backend: str = "jnp",
                             "fingerprint": [float(f) for f in fp.features()]})
         return loops_from_csr(csr, plan.r_boundary, plan.br,
                               panel_g=plan.panel_g), plan
-    res = search(csr, n_cols=n_cols, total_workers=total_workers,
+    res = search(csr, n_cols=n_cols, rhs_shape=rhs_shape,
+                 total_workers=total_workers,
                  model=model, budget=budget, backend=backend)
     cache.put(key, record_from_result(fp, res, nrows=csr.nrows, dtype=dt,
                                       n_cols=n_cols, backend=backend))
@@ -166,6 +178,7 @@ class Tuner:
 
     cache: PlanCache = dataclasses.field(default_factory=default_cache)
     n_cols: int = 32
+    rhs_shape: Optional[Tuple[int, ...]] = None  # full (..., K, N) operand
     backend: str = "jnp"
     total_workers: int = 8
     budget: SearchBudget = dataclasses.field(default_factory=SearchBudget)
@@ -173,7 +186,8 @@ class Tuner:
     near_distance: float = 0.25
 
     def tune(self, csr: CSR) -> Tuple[LoopsFormat, SpmmPlan]:
-        return autotune(csr, n_cols=self.n_cols, backend=self.backend,
+        return autotune(csr, n_cols=self.n_cols, rhs_shape=self.rhs_shape,
+                        backend=self.backend,
                         total_workers=self.total_workers, cache=self.cache,
                         model=self.model, budget=self.budget,
                         near_distance=self.near_distance)

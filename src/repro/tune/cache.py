@@ -36,7 +36,12 @@ __all__ = ["PlanCache", "CacheStats", "CACHE_VERSION", "default_cache_dir"]
 # v2: plans carry ``panel_g`` (G-wide kernel panels) — v1 records predate the
 # panelized kernels and must never be replayed as-if G=1 were still the only
 # execution shape.
-CACHE_VERSION = 2
+# v3: ``n_cols`` is the *effective* column count ``prod(batch) * N`` of the
+# (possibly batched) dense operand (``fingerprint.effective_n_cols``) — the
+# batched execution engine amortises A's panels across batch slices, so a
+# v2 record keyed on the trailing dim alone would transfer a plan tuned for
+# an 8x narrower workload.
+CACHE_VERSION = 3
 
 
 def default_cache_dir() -> str:

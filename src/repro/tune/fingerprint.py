@@ -27,7 +27,7 @@ import numpy as np
 from ..core.formats import CSR, LoopsFormat
 
 __all__ = ["Fingerprint", "fingerprint", "loops_fingerprint", "cache_key",
-           "feature_distance"]
+           "feature_distance", "effective_n_cols"]
 
 # Block height used for the block-density feature.  Fixed (not the plan's Br)
 # so fingerprints are comparable before any plan exists.
@@ -124,6 +124,24 @@ def loops_fingerprint(fmt: LoopsFormat) -> Fingerprint:
         log_row_max=math.log2(rmax + 1),
         block_density=min(nnz / (ntiles * _FP_BR), 1.0),
         bandwidth=0.0)
+
+
+def effective_n_cols(shape) -> int:
+    """Column count the execution engine actually feeds the matrix pipeline
+    for a dense operand of shape ``(..., K, N)``: ``prod(batch) * N``.
+
+    The batched kernels reuse A's panel layout across every batch slice, so
+    a ``(4, K, 128)`` operand exercises the grid like a ``(K, 512)`` one —
+    plans (and therefore cache keys, which hash ``n_cols``) must be keyed on
+    this effective count, not the trailing dim alone."""
+    shape = tuple(int(s) for s in shape)
+    if len(shape) < 2:
+        raise ValueError(f"dense operand shape must be (..., K, N); got "
+                         f"{shape}")
+    cols = shape[-1]
+    for d in shape[:-2]:
+        cols *= d
+    return cols
 
 
 def feature_distance(a: np.ndarray, b: np.ndarray) -> float:

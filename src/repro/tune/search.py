@@ -136,13 +136,18 @@ def measure_plan_gflops(csr: CSR, plan: SpmmPlan, b: jax.Array, *,
                         backend: str = "jnp",
                         budget: SearchBudget = SearchBudget()
                         ) -> Tuple[LoopsFormat, float]:
-    """Convert (Algorithm 1) under ``plan`` and time the hybrid execution."""
+    """Convert (Algorithm 1) under ``plan`` and time the hybrid execution.
+
+    ``b`` may carry leading batch dims — the timed call is then the native
+    batched engine call, and the FLOP count uses the effective column count
+    ``prod(batch) * N`` the engine actually processes."""
+    from .fingerprint import effective_n_cols
     fmt = loops_from_csr(csr, plan.r_boundary, plan.br,
                          panel_g=plan.panel_g)
     f = jax.jit(lambda bb: loops_spmm(fmt, bb, backend=backend))
     secs = _time_fn(f, b, repeats=budget.repeats, warmup=budget.warmup)
     nnz = max(fmt.nnz, 1)
-    return fmt, 2.0 * nnz * b.shape[1] / secs / 1e9
+    return fmt, 2.0 * nnz * effective_n_cols(b.shape) / secs / 1e9
 
 
 def _step_reduction_priors(csr: CSR, g_choices: Sequence[int]
@@ -157,7 +162,8 @@ def _step_reduction_priors(csr: CSR, g_choices: Sequence[int]
             for g in g_choices}
 
 
-def search(csr: CSR, *, n_cols: int = 32, total_workers: int = 8,
+def search(csr: CSR, *, n_cols: int = 32, rhs_shape=None,
+           total_workers: int = 8,
            model: Optional[QuadraticPerfModel] = None,
            br_choices: Sequence[int] = (2, 4, 8),
            g_choices: Sequence[int] = (1, 4, 8),
@@ -169,15 +175,28 @@ def search(csr: CSR, *, n_cols: int = 32, total_workers: int = 8,
            ) -> SearchResult:
     """Model-pruned, measurement-ranked plan search.
 
-    ``measure(csr, plan, b) -> (fmt, gflops)`` may be injected for
-    deterministic tests; the default is wall-clock
-    :func:`measure_plan_gflops` with ``backend``.
+    ``rhs_shape`` — a full ``(..., K, N)`` operand shape — makes the
+    measurement operand batched, so candidates are timed on the exact
+    batched engine call the workload will issue (``n_cols`` is then ignored
+    in favour of the effective column count).  ``measure(csr, plan, b) ->
+    (fmt, gflops)`` may be injected for deterministic tests; the default is
+    wall-clock :func:`measure_plan_gflops` with ``backend``.
     """
+    if rhs_shape is not None and tuple(rhs_shape)[-2] != csr.ncols:
+        raise ValueError(f"rhs_shape K={tuple(rhs_shape)[-2]} does not "
+                         f"match csr.ncols={csr.ncols}")
+    if b is not None and rhs_shape is not None \
+            and tuple(b.shape) != tuple(rhs_shape):
+        raise ValueError(f"explicit b has shape {tuple(b.shape)} but "
+                         f"rhs_shape={tuple(rhs_shape)}; pass one or make "
+                         "them agree — candidates are measured on b")
     if b is None:
         rng = np.random.default_rng(seed)
         dt = csr.vals.dtype if np.issubdtype(csr.vals.dtype, np.floating) \
             else np.float32
-        b = jnp.asarray(rng.standard_normal((csr.ncols, n_cols)).astype(dt))
+        shape = tuple(rhs_shape) if rhs_shape is not None \
+            else (csr.ncols, n_cols)
+        b = jnp.asarray(rng.standard_normal(shape).astype(dt))
     model = model or prior_model(total_workers)
     plans = enumerate_plans(csr, total_workers=total_workers,
                             br_choices=br_choices, g_choices=g_choices,

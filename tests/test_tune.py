@@ -408,3 +408,49 @@ def test_shard_loops_auto_consults_cache(tmp_path):
     # a different device count is a different cache context
     shard_loops_auto(fmt, 8, cache=cache)
     assert cache.stats.misses == 2
+
+
+def test_effective_n_cols_and_batched_cache_key(tmp_path):
+    """Batched operands key plans on prod(batch)*N — a (4, K, 16) workload
+    and an unbatched n_cols=64 one share the key; n_cols=16 does not."""
+    from repro.tune import effective_n_cols
+    assert effective_n_cols((64, 16)) == 16
+    assert effective_n_cols((4, 64, 16)) == 64
+    assert effective_n_cols((2, 3, 64, 16)) == 96
+    with pytest.raises(ValueError):
+        effective_n_cols((64,))
+    a = _dense(11, 96, 64, 0.2)
+    csr = csr_from_dense(a)
+    cache = PlanCache(str(tmp_path))
+    budget = SearchBudget(top_k=1, repeats=1, warmup=0)
+    autotune(csr, rhs_shape=(4, 64, 16), cache=cache, budget=budget)
+    autotune(csr, n_cols=64, cache=cache, budget=budget)   # same effective
+    assert cache.stats.hits == 1 and cache.stats.misses == 1
+    autotune(csr, n_cols=16, cache=cache, budget=budget)   # different
+    assert cache.stats.misses == 2
+
+
+def test_search_measures_batched_operand(tmp_path):
+    """search(rhs_shape=...) hands the measurement fn a batched operand of
+    exactly that shape, so candidates are timed on the real batched call."""
+    a = _dense(12, 64, 32, 0.25)
+    csr = csr_from_dense(a)
+    seen = []
+
+    def fake_measure(c, plan, b):
+        seen.append(tuple(b.shape))
+        from repro.core import loops_from_csr
+        fmt = loops_from_csr(c, plan.r_boundary, plan.br,
+                             panel_g=plan.panel_g)
+        return fmt, 1.0
+
+    search(csr, rhs_shape=(3, 32, 8), measure=fake_measure,
+           budget=SearchBudget(top_k=2))
+    assert seen and all(s == (3, 32, 8) for s in seen)
+    with pytest.raises(ValueError, match="ncols"):
+        search(csr, rhs_shape=(3, 16, 8), measure=fake_measure)
+    # an explicit b that disagrees with rhs_shape is an error, not a
+    # silently-unbatched measurement
+    with pytest.raises(ValueError, match="rhs_shape"):
+        search(csr, b=jnp.zeros((32, 8)), rhs_shape=(3, 32, 8),
+               measure=fake_measure)
