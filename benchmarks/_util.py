@@ -1,6 +1,7 @@
 """Shared benchmark utilities."""
 from __future__ import annotations
 
+import os
 import time
 
 import jax
@@ -15,6 +16,19 @@ ICI_BW = 50e9                 # bytes/s per link (~per chip, 1 link budget)
 CHIP_POWER_W = 170.0          # v5e-ish board power
 A100_POWER_W = 250.0          # paper Table 3 comparison point
 M4PRO_POWER_W = 40.0          # paper's CPU TDP
+
+
+def bench_rng(offset: int = 0) -> np.random.Generator:
+    """Seeded RNG for benchmark inputs.
+
+    Every suite draws its matrices/operands through this, so one
+    ``REPRO_TEST_SEED`` env var re-seeds the whole benchmark sweep (the
+    determinism test in tests/test_perf_trace.py runs a suite twice and
+    asserts identical grid-step columns).  ``offset`` decorrelates multiple
+    streams within one suite without decoupling them from the seed.
+    """
+    seed = int(os.environ.get("REPRO_TEST_SEED", "0"))
+    return np.random.default_rng(seed + offset)
 
 
 def time_fn(fn, *args, repeats: int = 20, warmup: int = 3) -> float:

@@ -33,7 +33,7 @@ import numpy as np
 from repro.core import csr_from_dense, loops_spmm, plan_and_convert
 from repro.core.spmm import loops_batched_grid_steps, loops_grid_steps
 
-from ._util import csv_row, time_fn
+from ._util import bench_rng, csv_row, time_fn
 
 N = 32                       # dense columns per RHS (paper fixes N=32)
 BATCHES = [1, 4, 8]
@@ -58,7 +58,7 @@ def main(out=print, record=None, smoke: bool = False):
     scale = 96 if smoke else 256
     density = 0.08
     repeats, warmup = (2, 1) if smoke else (5, 2)
-    rng = np.random.default_rng(0)
+    rng = bench_rng()
     a = ((rng.random((scale, scale // 2)) < density)
          * rng.standard_normal((scale, scale // 2))).astype(np.float32)
     csr = csr_from_dense(a)

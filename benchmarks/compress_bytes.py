@@ -1,10 +1,17 @@
 import os
-if "XLA_FLAGS" not in os.environ:
+if __name__ == "__main__" and "XLA_FLAGS" not in os.environ:
+    # Standalone CLI only — must precede the jax import.  Under
+    # benchmarks/run.py the runtime is already initialised; main() then
+    # skip-records unless 16 devices are actually available.
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
 
 """Quantifies the int8 gradient-compression trick (dist/compress.py):
 collective operand bytes of a fp32 ``psum`` vs ``compressed_psum`` for a
-gradient-sized block on a 16-device axis, measured from optimized HLO."""
+gradient-sized block on a 16-device axis, measured from optimized HLO.
+
+Registered in benchmarks/run.py as suite ``compress_bytes``; needs a
+16-device platform (``python -m benchmarks.compress_bytes`` forces one),
+otherwise emits a schema'd skip record."""
 import functools
 
 import jax
@@ -17,7 +24,16 @@ from repro.perf.hlo_analysis import analyze_hlo
 from ._util import csv_row
 
 
-def main(out=print):
+def main(out=print, record=None):
+    if jax.device_count() < 16:
+        reason = (f"needs 16 devices for the compression-axis mesh, have "
+                  f"{jax.device_count()}; run standalone: "
+                  "python -m benchmarks.compress_bytes")
+        out(csv_row("compress_bytes_SKIPPED", 0.0, reason))
+        if record is not None:
+            record({"suite": "compress_bytes", "skipped": True,
+                    "reason": reason})
+        return
     mesh = make_mesh((16,), ("d",))
     n = 1 << 22  # 4M fp32 grads per device (a ~16M-param shard)
     x = jax.ShapeDtypeStruct((16, n), jnp.float32)

@@ -29,7 +29,7 @@ from repro.core import (csr_to_dense, loops_from_csr, loops_grid_steps,
 from repro.core.partition import choose_r_boundary
 from repro.core.perf_model import calibrate
 
-from ._util import csv_row, gflops, time_fn
+from ._util import bench_rng, csv_row, gflops, time_fn
 
 N = 32  # paper fixes N=32
 MATRICES = ["m6", "m8", "m9", "m10", "m12", "m13", "m14", "m16", "m17", "m19"]
@@ -38,9 +38,18 @@ G_CHOICES = (4, 8)         # tuned-G candidates (G=1 is the baseline column)
 WALL_MATRICES = 3          # matrices that also get interpret wall-clock
 
 
-def calibrated_plan(csr, b, total: int = 4):
+def calibrated_plan(csr, b, total: int = 4, deterministic: bool = False):
     """Paper §3.5: fit Eq. 2 from warm-up runs of candidate splits, then
-    argmax (Eq. 3) -> boundary (Eq. 1)."""
+    argmax (Eq. 3) -> boundary (Eq. 1).
+
+    ``deterministic`` skips the wall-clock calibration and plans from the
+    proportional prior alone — smoke mode uses it so the recorded plan (and
+    with it every grid-step column the perf gate diffs exactly) is a pure
+    function of the seeded matrix, not of machine timing noise.
+    """
+    if deterministic:
+        return plan_and_convert(csr, total_workers=total)
+
     def measure(x, y):
         r = choose_r_boundary(csr.nrows, 1.0, 4.0, max(x, 0), max(y, 0),
                               br=8)
@@ -97,12 +106,12 @@ def panel_comparison(csr, plan, b, *, mid: str, name_dt: str, out,
 
 
 def run(dtype=np.float32, scale_rows: int = 1024, out=print, record=None,
-        smoke: bool = False):
+        smoke: bool = False, recorder=None):
     name_dt = {np.float32: "fp32", np.float64: "fp64"}[dtype]
     if dtype == np.float64:
         jax.config.update("jax_enable_x64", True)
     try:
-        rng = np.random.default_rng(0)
+        rng = bench_rng()
         matrices = SMOKE_MATRICES if smoke else MATRICES
         rows, g8_reds = [], []
         for i, mid in enumerate(matrices):
@@ -110,7 +119,7 @@ def run(dtype=np.float32, scale_rows: int = 1024, out=print, record=None,
                                     dtype=dtype)
             nnz = csr.nnz
             b = jnp.asarray(rng.standard_normal((csr.shape[1], N)), dtype)
-            fmt, plan = calibrated_plan(csr, b)
+            fmt, plan = calibrated_plan(csr, b, deterministic=smoke)
             dense = jnp.asarray(csr_to_dense(csr))
 
             f_loops = jax.jit(lambda bb: loops_spmm(fmt, bb, backend="jnp"))
@@ -132,6 +141,9 @@ def run(dtype=np.float32, scale_rows: int = 1024, out=print, record=None,
                         "us_per_call": t_loops * 1e6, "gflops": g,
                         "vs_taco": t_taco / t_loops,
                         "vs_dense": t_arma / t_loops})
+            if recorder is not None:
+                recorder.record_spmm(csr, plan, wall_s=t_loops, n_cols=N,
+                                     backend="jnp", gflops=g)
             g8_reds.append(panel_comparison(
                 csr, plan, b, mid=mid, name_dt=name_dt, out=out,
                 record=record, wall_clock=(i < WALL_MATRICES), smoke=smoke))
@@ -143,7 +155,7 @@ def run(dtype=np.float32, scale_rows: int = 1024, out=print, record=None,
                     f"speedup_vs_dense={np.exp(np.log(sp[:, 1]).mean()):.2f}x;"
                     f"step_reduction_g{g_ref}={ref_geo:.2f}x"))
         if record is not None:
-            record({"suite": "fig4_panel", "matrix": "geomean",
+            record({"suite": "fig4_panel_geomean", "matrix": "geomean",
                     "dtype": name_dt,
                     f"step_reduction_g{g_ref}": ref_geo})
     finally:
@@ -151,11 +163,12 @@ def run(dtype=np.float32, scale_rows: int = 1024, out=print, record=None,
             jax.config.update("jax_enable_x64", False)
 
 
-def main(out=print, record=None, smoke: bool = False):
+def main(out=print, record=None, smoke: bool = False, recorder=None):
     scale = 192 if smoke else 1024
-    run(np.float32, scale_rows=scale, out=out, record=record, smoke=smoke)
+    run(np.float32, scale_rows=scale, out=out, record=record, smoke=smoke,
+        recorder=recorder)
     if not smoke:
-        run(np.float64, out=out, record=record)
+        run(np.float64, out=out, record=record, recorder=recorder)
 
 
 if __name__ == "__main__":

@@ -2,9 +2,10 @@
 
 Prints ``name,us_per_call,derived`` CSV rows (and mirrors them to
 benchmarks/results/bench.csv).  Suites that emit structured records (fig4's
-panelization columns) also land in benchmarks/results/bench.json — the
-machine-readable perf trajectory (``panel_g``, grid-step reductions,
-wall-clock) that CI diffs against.
+panelization columns, the batched engine suite) also land in
+benchmarks/results/bench.json — the machine-readable perf trajectory
+(``panel_g``, grid-step reductions, wall-clock) that CI diffs against a
+committed baseline via tools/perf_gate.py.
 
   fig4   — FP64/FP32 SpMM throughput vs TACO-like / Armadillo-like (Fig. 4)
            + the G=1 vs tuned-G panelization columns
@@ -16,10 +17,25 @@ wall-clock) that CI diffs against.
   autotune — model-only vs measured/cached plans + cache hit rates
   batched  — multi-RHS engine: per-element loop vs vmap-unrolled vs
              native batched (fwd and fwd+bwd, grid-step columns)
+  spmm_dryrun    — production-mesh distributed SpMM cell; skip-records
+                   unless a 256-device platform is live (standalone CLI
+                   forces one: ``python -m benchmarks.spmm_dryrun``)
+  compress_bytes — int8/bf16 compressed-psum collective bytes; skip-records
+                   unless 16 devices are live (standalone CLI forces them)
 
 ``--smoke`` shrinks the suites that support it (tiny matrices, fewer
 repeats) for CI: kernel-layer regressions then surface as benchmark
-failures, not only as test failures.
+failures, not only as test failures.  In smoke mode fig4 plans
+deterministically (no wall-clock calibration), so the grid-step columns
+are a pure function of the seeded matrices — the property the perf gate's
+exact checks rely on.
+
+Perf-gate flags: ``--baseline F`` runs tools/perf_gate.py against F after
+the suites finish (non-zero exit on regression); ``--update-baseline``
+copies the freshly merged bench.json over F instead (refreshing the
+committed BENCH_<PR>.json after an intentional change).  ``--trace``
+records a perf trace (engine dispatches + per-matrix SpMM wall-clock) to
+benchmarks/results/traces/<source>.jsonl for replay/cost-model fitting.
 """
 from __future__ import annotations
 
@@ -27,23 +43,19 @@ import argparse
 import inspect
 import json
 import os
+import shutil
 import sys
 import traceback
 
+DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "results",
+                                "BENCH_006.json")
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=None,
-                    help="comma list: fig4,fig5,sec43,table3,table4,"
-                         "roofline,autotune,batched")
-    ap.add_argument("--smoke", action="store_true",
-                    help="tiny-suite CI mode (suites that support it)")
-    args = ap.parse_args()
 
-    from . import (autotune_suite, batched_spmm, fig4_throughput,
-                   fig5_halfprec, roofline, sec43_scheduling, table3_energy,
-                   table4_gnn)
-    suites = {
+def _suite_registry():
+    from . import (autotune_suite, batched_spmm, compress_bytes,
+                   fig4_throughput, fig5_halfprec, roofline, sec43_scheduling,
+                   spmm_dryrun, table3_energy, table4_gnn)
+    return {
         "fig4": fig4_throughput.main,
         "fig5": fig5_halfprec.main,
         "sec43": sec43_scheduling.main,
@@ -52,13 +64,53 @@ def main() -> None:
         "roofline": roofline.main,
         "autotune": autotune_suite.main,
         "batched": batched_spmm.main,
+        "spmm_dryrun": spmm_dryrun.bench_main,
+        "compress_bytes": compress_bytes.main,
     }
+
+
+# Keep --only's help in sync with the registry without importing the suite
+# modules (and therefore jax) just to print --help.
+SUITE_NAMES = ["fig4", "fig5", "sec43", "table3", "table4", "roofline",
+               "autotune", "batched", "spmm_dryrun", "compress_bytes"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list of suites: " + ",".join(SUITE_NAMES))
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny-suite CI mode (suites that support it)")
+    ap.add_argument("--trace", action="store_true",
+                    help="record a perf trace (engine dispatch + SpMM "
+                         "wall-clock) to benchmarks/results/traces/")
+    ap.add_argument("--baseline", nargs="?", const=DEFAULT_BASELINE,
+                    default=None, metavar="F",
+                    help="after the run, gate the merged bench.json against "
+                         f"this baseline (default {DEFAULT_BASELINE})")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="copy the merged bench.json over the baseline file "
+                         "instead of gating against it")
+    args = ap.parse_args()
+
+    suites = _suite_registry()
+    assert sorted(suites) == sorted(SUITE_NAMES), \
+        "suite registry drifted from SUITE_NAMES — update both"
     chosen = (args.only.split(",") if args.only else list(suites))
+    unknown = [n for n in chosen if n not in suites]
+    if unknown:
+        ap.error(f"unknown suite(s) {unknown}; choose from "
+                 + ",".join(SUITE_NAMES))
 
     results_dir = os.path.join(os.path.dirname(__file__), "results")
     os.makedirs(results_dir, exist_ok=True)
     rows: list[str] = []
     records: list[dict] = []
+
+    recorder = None
+    if args.trace:
+        from repro.perf.trace import TraceRecorder
+        recorder = TraceRecorder(source="bench-" + "-".join(chosen))
 
     def emit(line: str):
         print(line, flush=True)
@@ -74,8 +126,14 @@ def main() -> None:
             kwargs["smoke"] = args.smoke
         if "record" in params:
             kwargs["record"] = records.append
+        if recorder is not None and "recorder" in params:
+            kwargs["recorder"] = recorder
         try:
-            fn(out=emit, **kwargs)
+            if recorder is not None:
+                with recorder.attach_engine():
+                    fn(out=emit, **kwargs)
+            else:
+                fn(out=emit, **kwargs)
         except Exception:
             failures += 1
             emit(f"{name}_FAILED,0,{traceback.format_exc(limit=1).strip()}")
@@ -94,8 +152,22 @@ def main() -> None:
         kept = []
     with open(json_path, "w") as f:
         json.dump(kept + records, f, indent=1, sort_keys=True)
+    if recorder is not None and recorder.records:
+        print(f"trace: {recorder.save()}", flush=True)
     if failures:
         sys.exit(1)
+
+    if args.update_baseline:
+        target = args.baseline or DEFAULT_BASELINE
+        shutil.copyfile(json_path, target)
+        print(f"baseline updated: {target}", flush=True)
+    elif args.baseline:
+        tools_dir = os.path.join(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))), "tools")
+        sys.path.insert(0, tools_dir)
+        import perf_gate
+        sys.exit(perf_gate.main(["--baseline", args.baseline,
+                                 "--current", json_path]))
 
 
 if __name__ == "__main__":

@@ -1,5 +1,10 @@
 import os
-if "XLA_FLAGS" not in os.environ:
+if __name__ == "__main__" and "XLA_FLAGS" not in os.environ:
+    # Standalone CLI only: must run before the jax import below.  When
+    # imported by benchmarks/run.py for suite registration this must NOT
+    # fire — jax is usually initialised already and forcing 512 host
+    # devices would reshape every other suite.  run.py instead calls
+    # bench_main(), which skip-records unless the mesh is actually there.
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
 """Paper-technique production cell: distributed LOOPS SpMM on the full mesh.
@@ -12,6 +17,12 @@ an in-2004-like web matrix (1.4M rows, ~17M nnz, power-law skew) with N=32.
 Writes a dryrun-style JSON (tag 'spmm') so §Roofline/§Perf treat it like any
 other cell.  ``--set g_frac=<f>`` and ``--set boundary_frac=<f>`` expose the
 scheduler knobs for hillclimbing.
+
+Registered in benchmarks/run.py as suite ``spmm_dryrun`` via
+:func:`bench_main`: it needs the forced 256-worker host platform, so under
+a normally-initialised runtime it emits a schema'd skip record instead of
+numbers (run it standalone — ``python -m benchmarks.spmm_dryrun`` — to get
+the real cell).
 """
 import argparse
 import json
@@ -145,6 +156,37 @@ def main():
           f"useful/dev={useful:.3e} ratio={useful / max(flops, 1):.3f}")
     print(f"     hbm/dev={st.hbm_bytes / 1e9:.3f} GB  "
           f"coll/dev={st.collective_bytes / 1e6:.3f} MB -> {out}")
+
+
+def bench_main(out=print, record=None, smoke: bool = False):
+    """Registry entry point (suite ``spmm_dryrun`` in benchmarks/run.py).
+
+    The cell hard-requires the 256-worker mesh
+    (:func:`repro.launch.mesh.make_production_mesh`); a normally-initialised
+    runtime can't grow devices after the fact, so anything smaller emits a
+    schema'd skip record — the bench.json row still exists, CI still
+    validates it, and the reason points at the standalone CLI.
+    """
+    import jax
+
+    if jax.device_count() < 256:
+        reason = (f"needs 256 devices for the production mesh, have "
+                  f"{jax.device_count()}; run standalone: "
+                  "python -m benchmarks.spmm_dryrun")
+        out(f"spmm_dryrun_SKIPPED,0.0,{reason}")
+        if record is not None:
+            record({"suite": "spmm_dryrun", "skipped": True,
+                    "reason": reason})
+        return
+    import sys
+
+    argv, sys.argv = sys.argv, [sys.argv[0]]
+    if smoke:
+        sys.argv += ["--rows", "100000", "--tag", "spmm-smoke"]
+    try:
+        main()
+    finally:
+        sys.argv = argv
 
 
 if __name__ == "__main__":

@@ -142,7 +142,7 @@ def shard_loops(fmt: LoopsFormat, num_devices: int, g_vpu: int) -> ShardedLoops:
 def shard_loops_auto(fmt: LoopsFormat, num_devices: int, *,
                      model: QuadraticPerfModel | None = None,
                      measure: Callable[[int, int], float] | None = None,
-                     cache=None) -> ShardedLoops:
+                     cache=None, trace_db=None) -> ShardedLoops:
     """Coarse-level scheduling (paper §3.5.3): let the quadratic perf model
     pick the (vector-group, matrix-group) *device* split, then shard.
 
@@ -159,6 +159,14 @@ def shard_loops_auto(fmt: LoopsFormat, num_devices: int, *,
     solving Eq. 3: if a structurally matching device split was recorded for
     this ``num_devices``, it is reused (calibration and the argmax are both
     skipped); otherwise the solved split is stored for the next caller.
+
+    ``trace_db`` — a :class:`repro.perf.replay.TraceDB` of measured trace
+    records — supplies the model when neither ``model`` nor ``measure`` is
+    given: the Eq. 2 coefficients are refit from the traces
+    (:func:`repro.perf.trace.fit_cost_model`, ``calibrated_from`` stamped)
+    and Eq. 3's argmax runs on measured numbers instead of the
+    proportional-nnz fallback.  An underdetermined database degrades to the
+    fallback silently.
     """
     has_csr = fmt.r_boundary > 0
     has_bcsr = fmt.r_boundary < fmt.nrows
@@ -187,6 +195,8 @@ def shard_loops_auto(fmt: LoopsFormat, num_devices: int, *,
     if model is None and measure is not None:
         from .perf_model import calibrate
         model = calibrate(measure, num_devices)
+    if model is None and trace_db is not None:
+        model = trace_db.cost_model()   # None when underdetermined
     if model is not None:
         # best_allocation may leave devices idle (x + y < D); only the
         # ratio matters here, every device gets a chunk of its group's work

@@ -42,6 +42,11 @@ class QuadraticPerfModel:
     """
 
     coef: np.ndarray  # (5,) [a0..a4] or (7,) [a0..a4, a5, a6]
+    # Provenance: where the coefficients came from ("traces:<n> records",
+    # "calibrate:<n> probes", None for hand-set/prior models).  The trace
+    # layer (repro.perf.trace.fit_cost_model) stamps this so a schedule can
+    # always be traced back to its measurement source.
+    calibrated_from: str | None = None
 
     @property
     def has_panel_terms(self) -> bool:
@@ -102,7 +107,9 @@ def _design(samples: np.ndarray) -> np.ndarray:
 
 
 def fit_perf_model(samples: Sequence[Tuple[int, ...]],
-                   perfs: Sequence[float]) -> QuadraticPerfModel:
+                   perfs: Sequence[float], *,
+                   ridge: float | None = None,
+                   calibrated_from: str | None = None) -> QuadraticPerfModel:
     """Least-squares fit of Eq. 2 over measured (x, y) -> perf samples, or of
     the panel-extended form over (x, y, g) triples.
 
@@ -113,6 +120,13 @@ def fit_perf_model(samples: Sequence[Tuple[int, ...]],
     fall back to a ridge (Tikhonov) solution: minimal-norm coefficients that
     still interpolate the measurements, with the quadratic terms shrunk so
     the argmax cannot run away on unmeasured configurations.
+
+    ``ridge`` — an explicit Tikhonov strength (relative to the mean design
+    energy) — forces the regularised solve even on full-rank systems.  The
+    trace-calibrated path (:func:`repro.perf.trace.fit_cost_model`) uses
+    this: measured samples carry wall-clock noise, and an unregularised
+    quadratic happily chases it.  ``calibrated_from`` stamps the returned
+    model's provenance field.
     """
     xy = np.asarray(samples, np.float64)
     if xy.ndim != 2 or xy.shape[1] not in (2, 3):
@@ -123,14 +137,16 @@ def fit_perf_model(samples: Sequence[Tuple[int, ...]],
                          "coefficients")
     design = _design(xy)
     p = np.asarray(perfs, np.float64)
-    if np.linalg.matrix_rank(design) < design.shape[1]:
+    deficient = np.linalg.matrix_rank(design) < design.shape[1]
+    if ridge is not None or deficient:
+        rel = ridge if ridge is not None else 1e-6
         ata = design.T @ design
-        lam = 1e-6 * max(float(np.trace(ata)) / design.shape[1], 1.0)
+        lam = rel * max(float(np.trace(ata)) / design.shape[1], 1.0)
         coef = np.linalg.solve(ata + lam * np.eye(design.shape[1]),
                                design.T @ p)
     else:
         coef, *_ = np.linalg.lstsq(design, p, rcond=None)
-    return QuadraticPerfModel(coef=coef)
+    return QuadraticPerfModel(coef=coef, calibrated_from=calibrated_from)
 
 
 def default_candidates(total: int) -> Iterable[Tuple[int, int]]:
@@ -164,7 +180,8 @@ def calibrate(measure: Callable[..., float], total: int,
     if g_choices is not None and (not cand or len(cand[0]) == 2):
         cand = [(x, y, g) for (x, y) in cand for g in g_choices]
     perfs = [measure(*c) for c in cand]
-    return fit_perf_model(cand, perfs)
+    return fit_perf_model(cand, perfs,
+                          calibrated_from=f"calibrate:{len(cand)} probes")
 
 
 def best_allocation(measure: Callable[[int, int], float], total: int

@@ -109,13 +109,25 @@ def _flat_zeros(params_avals, n_shards: int):
         params_avals)
 
 
+def _maybe_record(fn, recorder, op: str):
+    """Wrap a jitted step fn with the perf-trace recorder (no-op without
+    one): each call blocks on its outputs and lands one ``step`` record
+    (``repro.perf.trace.TraceRecorder.wrap_step``)."""
+    if recorder is None:
+        return fn
+    return recorder.wrap_step(fn, op=op)
+
+
 def build_train_step(cfg: ModelConfig, mesh: Mesh, params_avals, batch_avals,
                      opt: OptConfig, *, n_microbatches: int = 1,
-                     loss_fn: Callable | None = None) -> StepBundle:
+                     loss_fn: Callable | None = None,
+                     recorder=None) -> StepBundle:
     """Build the jitted grad-accumulating ZeRO-1 train step for ``cfg``.
 
     ``loss_fn(params, microbatch) -> (loss, aux)`` defaults to the family-
-    dispatched ``models.api.train_loss``.
+    dispatched ``models.api.train_loss``.  ``recorder`` — a
+    :class:`repro.perf.trace.TraceRecorder` — wraps the returned step so
+    every call appends a per-step wall-clock trace record.
     """
     loss_fn = loss_fn or (lambda p, mb: api.train_loss(cfg, p, mb))
     p_spec = shr.param_specs(params_avals, mesh, cfg)
@@ -154,16 +166,19 @@ def build_train_step(cfg: ModelConfig, mesh: Mesh, params_avals, batch_avals,
     rep = NamedSharding(mesh, P())
     fn = jax.jit(step, in_shardings=(psh, osh, bsh),
                  out_shardings=(psh, osh, rep), donate_argnums=(0, 1))
-    return StepBundle(fn=fn, param_spec=p_spec, opt_spec=o_spec,
+    return StepBundle(fn=_maybe_record(fn, recorder, "train_step"),
+                      param_spec=p_spec, opt_spec=o_spec,
                       batch_spec=b_spec, n_microbatches=n_mb)
 
 
-def build_prefill(cfg: ModelConfig, mesh: Mesh, params_avals, batch_avals):
+def build_prefill(cfg: ModelConfig, mesh: Mesh, params_avals, batch_avals,
+                  *, recorder=None):
     """Jitted prefill: ``fn(params, batch) -> (cache, last_logits)``.
 
     Returns ``(fn, param_spec, cache_spec)``; the cache comes out already
     sharded per :func:`repro.dist.sharding.cache_specs`, so the decode step
-    built against it never reshards.
+    built against it never reshards.  ``recorder`` traces per-call wall
+    clock like :func:`build_train_step`.
     """
     p_spec = shr.param_specs(params_avals, mesh, cfg)
     b_spec = shr.prefill_batch_specs(batch_avals, mesh)
@@ -179,15 +194,17 @@ def build_prefill(cfg: ModelConfig, mesh: Mesh, params_avals, batch_avals):
                       shr.spec_to_sharding(b_spec, mesh)),
         out_shardings=(shr.spec_to_sharding(c_spec, mesh),
                        NamedSharding(mesh, shr.logits_spec(mesh))))
-    return fn, p_spec, c_spec
+    return _maybe_record(fn, recorder, "prefill"), p_spec, c_spec
 
 
-def build_serve_step(cfg: ModelConfig, mesh: Mesh, params_avals, cache_avals):
+def build_serve_step(cfg: ModelConfig, mesh: Mesh, params_avals, cache_avals,
+                     *, recorder=None):
     """Jitted single-token decode:
     ``fn(params, cache, tokens, length) -> (cache, logits)`` with the cache
     donated (decode is a pure cache update — the old buffers are dead).
 
-    Returns ``(fn, param_spec, cache_spec)``.
+    Returns ``(fn, param_spec, cache_spec)``.  ``recorder`` traces per-call
+    wall clock like :func:`build_train_step`.
     """
     p_spec = shr.param_specs(params_avals, mesh, cfg)
     c_spec = shr.cache_specs(cache_avals, mesh, cfg)
@@ -204,4 +221,4 @@ def build_serve_step(cfg: ModelConfig, mesh: Mesh, params_avals, cache_avals):
         out_shardings=(shr.spec_to_sharding(c_spec, mesh),
                        NamedSharding(mesh, shr.logits_spec(mesh))),
         donate_argnums=(1,))
-    return fn, p_spec, c_spec
+    return _maybe_record(fn, recorder, "decode"), p_spec, c_spec

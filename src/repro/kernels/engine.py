@@ -49,6 +49,7 @@ __all__ = [
     "check_rhs", "flatten_batch", "unflatten_batch", "batch_block",
     "padded_batch", "MAX_BATCH_BLOCK", "register_kernel", "get_kernel",
     "panel_values", "csr_spmm", "bcsr_spmm", "loops_spmm_fused", "loops_sdd",
+    "set_tracer", "get_tracer",
 ]
 
 # Max batch slices processed per kernel grid step.  8 slices × bn=512 lanes
@@ -192,6 +193,38 @@ def _empty_batch(b) -> bool:
 
 
 # ---------------------------------------------------------------------------
+# dispatch tracer (repro.perf.trace attaches here)
+# ---------------------------------------------------------------------------
+
+# A single process-wide tracer hook.  The entry points below call
+# ``_note(part, op, ...)`` with STRUCTURAL dispatch facts (which kernel
+# flavour ran, how many panels/nonzeros the grid walks, the flat batch and
+# column extents).  The calls fire at trace time — under ``jax.jit`` that is
+# once per compilation, not once per execution — so a tracer must never
+# record wall-clock here; timing belongs at blocking call sites
+# (``repro.perf.trace.TraceRecorder``'s timed wrappers).
+_TRACER = None
+
+
+def set_tracer(tracer):
+    """Install ``tracer`` (an object with ``on_dispatch(**fields)``, or
+    ``None`` to detach) as the engine's dispatch hook; returns the previous
+    tracer so callers can restore it."""
+    global _TRACER
+    prev, _TRACER = _TRACER, tracer
+    return prev
+
+
+def get_tracer():
+    return _TRACER
+
+
+def _note(part: str, op: str, **fields) -> None:
+    if _TRACER is not None:
+        _TRACER.on_dispatch(part=part, op=op, **fields)
+
+
+# ---------------------------------------------------------------------------
 # kernel registry
 # ---------------------------------------------------------------------------
 
@@ -256,12 +289,19 @@ def csr_spmm(csr, b: jax.Array, *, backend: str | None = None,
         _, out = resolve_dtypes(v.dtype, out_dtype)
         return jnp.zeros(b.shape[:-2] + (csr.nrows, b.shape[-1]), out)
     if backend == "jnp":
+        _note("csr", "spmm", backend=backend, impl="ref", units=csr.nnz,
+              batch=1, n=int(b.shape[-1]))
         return get_kernel("csr", "spmm", "ref")(
             jnp.asarray(csr.row_ids), jnp.asarray(csr.col_idx), v, b,
             csr.nrows, out_dtype=out_dtype)
     interpret = backend == "interpret"
     b3, batch = flatten_batch(b)
     b3p = _pad_flat_batch(b3)
+    _note("csr", "spmm", backend=backend,
+          impl="panels" if panels is not None else "flat",
+          units=int(panels.npanels) if panels is not None else int(csr.nnz),
+          batch=int(b3p.shape[0]) if b3p.ndim == 3 else 1,
+          n=int(b.shape[-1]))
     if panels is not None:
         out = get_kernel("csr", "spmm", "panels")(
             jnp.asarray(panels.panel_rows), jnp.asarray(panels.panel_cols),
@@ -294,6 +334,8 @@ def bcsr_spmm(bcsr, b: jax.Array, *, backend: str | None = None,
         _, out = resolve_dtypes(v.dtype, out_dtype)
         return jnp.zeros(b.shape[:-2] + (bcsr.nrows, b.shape[-1]), out)
     if backend == "jnp":
+        _note("bcsr", "spmm", backend=backend, impl="ref",
+              units=int(bcsr.ntiles), batch=1, n=int(b.shape[-1]))
         padded = get_kernel("bcsr", "spmm", "ref")(
             jnp.asarray(bcsr.tile_rows), jnp.asarray(bcsr.tile_cols), v, b,
             bcsr.nblocks, out_dtype=out_dtype)
@@ -301,6 +343,12 @@ def bcsr_spmm(bcsr, b: jax.Array, *, backend: str | None = None,
     interpret = backend == "interpret"
     b3, batch = flatten_batch(b)
     b3p = _pad_flat_batch(b3)
+    _note("bcsr", "spmm", backend=backend,
+          impl="panels" if panels is not None else "flat",
+          units=int(panels.npanels) if panels is not None
+          else int(bcsr.ntiles),
+          batch=int(b3p.shape[0]) if b3p.ndim == 3 else 1,
+          n=int(b.shape[-1]))
     if panels is not None:
         padded = get_kernel("bcsr", "spmm", "panels")(
             jnp.asarray(panels.panel_rows), jnp.asarray(panels.panel_cols),
@@ -352,6 +400,11 @@ def loops_spmm_fused(fmt, b: jax.Array, *, backend: str | None = None,
     interpret = backend == "interpret"
     b3, batch = flatten_batch(b)
     b3p = _pad_flat_batch(b3)
+    nb = int(b3p.shape[0]) if b3p.ndim == 3 else 1
+    _note("csr", "spmm", backend=backend, impl="panels", fused=True,
+          units=int(cp.npanels), batch=nb, n=int(b.shape[-1]))
+    _note("bcsr", "spmm", backend=backend, impl="panels", fused=True,
+          units=int(bp.npanels), batch=nb, n=int(b.shape[-1]))
     r_pad = r_b + bp.nblocks * br
     out = get_kernel("csr", "spmm", "panels")(
         jnp.asarray(cp.panel_rows), jnp.asarray(cp.panel_cols),
@@ -452,6 +505,13 @@ def _loops_sdd_impl(fmt, dy, b, backend, bn):
     dy3 = _pad_flat_batch(flatten_batch(dy)[0])
     dy_pad3 = _pad_flat_batch(flatten_batch(dy_pad)[0])
     cp, bp = fmt.csr_panels, fmt.bcsr_panels
+    nb = int(b3.shape[0]) if b3.ndim == 3 else 1
+    if has_csr:
+        _note("csr", "sdd", backend=backend, impl="panels",
+              units=int(cp.npanels), batch=nb, n=int(b.shape[-1]))
+    if has_bcsr:
+        _note("bcsr", "sdd", backend=backend, impl="panels",
+              units=int(bp.npanels), batch=nb, n=int(b.shape[-1]))
     if has_csr:
         d_csr = cp.gather_values(get_kernel("csr", "sdd", "panels")(
             jnp.asarray(cp.panel_rows), jnp.asarray(cp.panel_cols), dy3, b3,

@@ -1,1 +1,20 @@
-"""Perf tooling: HLO analysis for roofline terms."""
+"""Perf tooling: HLO roofline analysis + the trace → fit → replay loop.
+
+  * :mod:`repro.perf.hlo_analysis` — roofline terms from compiled HLO;
+  * :mod:`repro.perf.trace` — :class:`TraceRecorder`, JSONL trace files,
+    :func:`fit_cost_model` (Eq. 2 refit from measurement, provenance
+    stamped);
+  * :mod:`repro.perf.replay` — :class:`TraceDB`, structural
+    :func:`predict_grid_steps`, and :func:`replay` — a plan's predicted
+    step time before any conversion is paid;
+  * :mod:`repro.perf.schema` — the dependency-free JSON-Schema subset
+    validator the bench/trace golden-schema tests and ``tools/perf_gate.py``
+    share.
+"""
+from .replay import TraceDB, predict_grid_steps, predict_part_steps, replay
+from .trace import (TRACE_SCHEMA_VERSION, TraceRecorder, fit_cost_model,
+                    load_traces, matrix_key)
+
+__all__ = ["TRACE_SCHEMA_VERSION", "TraceRecorder", "fit_cost_model",
+           "load_traces", "matrix_key", "TraceDB", "predict_grid_steps",
+           "predict_part_steps", "replay"]

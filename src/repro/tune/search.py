@@ -171,7 +171,8 @@ def search(csr: CSR, *, n_cols: int = 32, rhs_shape=None,
            b: Optional[jax.Array] = None, seed: int = 0,
            tp_vpu: float = 1.0, tp_mxu: float = 4.0,
            measure: Optional[Callable[[CSR, SpmmPlan, jax.Array],
-                                      Tuple[LoopsFormat, float]]] = None
+                                      Tuple[LoopsFormat, float]]] = None,
+           trace_db=None, recorder=None
            ) -> SearchResult:
     """Model-pruned, measurement-ranked plan search.
 
@@ -181,6 +182,14 @@ def search(csr: CSR, *, n_cols: int = 32, rhs_shape=None,
     in favour of the effective column count).  ``measure(csr, plan, b) ->
     (fmt, gflops)`` may be injected for deterministic tests; the default is
     wall-clock :func:`measure_plan_gflops` with ``backend``.
+
+    ``trace_db`` — a :class:`repro.perf.replay.TraceDB` of measured cells —
+    upgrades the pruning stage: candidates are ranked by their *replayed*
+    step time (structural grid steps × fitted per-step cost, no conversion
+    paid) instead of the capacity prior; the measurement stage is unchanged.
+    ``recorder`` — a :class:`repro.perf.trace.TraceRecorder` — captures
+    every measured trial as a ``search_trial`` record, feeding the next
+    fit/replay round.
     """
     if rhs_shape is not None and tuple(rhs_shape)[-2] != csr.ncols:
         raise ValueError(f"rhs_shape K={tuple(rhs_shape)[-2]} does not "
@@ -236,7 +245,24 @@ def search(csr: CSR, *, n_cols: int = 32, rhs_shape=None,
             g_scale = step_prior.get(p.panel_g, 1.0)
         return max(capacity, 1e-12) * g_scale * n / bottleneck
 
-    scored = sorted(plans, key=lambda p: -_prior(p))
+    # Replay-based pruning: when a trace database can support a per-step
+    # cost fit, rank candidates by predicted wall time of THIS matrix under
+    # each plan (lower is better) — a measured signal that already folds in
+    # boundary, tile height and panel width — instead of the capacity prior.
+    replay_rank = None
+    if trace_db is not None:
+        from ..perf.replay import predict_part_steps
+        from .fingerprint import effective_n_cols
+        coef = trace_db.step_cost(backend)
+        if coef is not None:
+            eff_cols = effective_n_cols(rhs_shape) if rhs_shape is not None \
+                else n_cols
+            def replay_rank(p: SpmmPlan) -> float:  # noqa: E731-style rebind
+                s_csr, s_bcsr = predict_part_steps(csr, p, eff_cols)
+                return trace_db.predict_us(coef, s_csr, s_bcsr, p.panel_g)
+
+    scored = sorted(plans, key=(replay_rank if replay_rank is not None
+                                else lambda p: -_prior(p)))
     survivors: List[SpmmPlan] = []
     seen_conv = set()
     for p in scored:
@@ -255,6 +281,14 @@ def search(csr: CSR, *, n_cols: int = 32, rhs_shape=None,
     for p in survivors:
         fmt, g = meas(csr, p, b)
         trials.append((p, g))
+        if recorder is not None:
+            from .fingerprint import effective_n_cols as _eff
+            eff = _eff(b.shape)
+            nnz = max(int(np.count_nonzero(csr.vals)), 1)
+            wall_s = 2.0 * nnz * eff / (g * 1e9) if g > 0 else 0.0
+            recorder.record_spmm(csr, p, wall_s=wall_s, n_cols=eff,
+                                 backend=backend, kind="search_trial",
+                                 gflops=g)
         if g > best_g:
             best_plan, best_fmt, best_g = p, fmt, g
     assert best_plan is not None and best_fmt is not None

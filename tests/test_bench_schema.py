@@ -1,0 +1,80 @@
+"""Golden-schema contract: every bench.json record and every trace JSONL
+line must validate against the committed ``benchmarks/bench_schema.json``.
+A suite that adds/renames a column without updating the schema fails here
+— BEFORE the perf gate ever diffs a silently-reshaped record."""
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.core import csr_from_dense, plan_and_convert
+from repro.perf.schema import load_schema, validate
+from repro.perf.trace import TraceRecorder
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+SCHEMA = load_schema(ROOT / "benchmarks" / "bench_schema.json")
+
+BENCH_REF = {"$ref": "#/definitions/bench_file"}
+TRACE_REF = {"$ref": "#/definitions/trace_file"}
+
+
+def test_committed_baseline_validates():
+    with open(ROOT / "benchmarks" / "results" / "BENCH_006.json") as f:
+        recs = json.load(f)
+    assert recs
+    assert validate(recs, BENCH_REF, SCHEMA) == []
+
+
+def test_current_bench_json_validates_when_present():
+    path = ROOT / "benchmarks" / "results" / "bench.json"
+    if not path.exists():
+        pytest.skip("no bench.json in this checkout (benchmarks not run)")
+    with open(path) as f:
+        recs = json.load(f)
+    assert validate(recs, BENCH_REF, SCHEMA) == []
+
+
+def test_schema_rejects_missing_required_column():
+    with open(ROOT / "benchmarks" / "results" / "BENCH_006.json") as f:
+        recs = json.load(f)
+    rec = dict(next(r for r in recs if r.get("suite") == "batched"))
+    del rec["grid_steps_native"]
+    assert validate([rec], BENCH_REF, SCHEMA)
+
+
+def test_schema_rejects_wrong_types():
+    rec = {"suite": "fig4", "matrix": "m6", "dtype": "fp32",
+           "panel_g": "eight", "nnz": 10, "us_per_call": 1.0,
+           "gflops": 1.0, "vs_taco": 1.0, "vs_dense": 1.0}
+    assert validate([rec], BENCH_REF, SCHEMA)
+
+
+def test_skip_record_validates():
+    rec = {"suite": "compress_bytes", "skipped": True,
+           "reason": "needs 16 devices"}
+    assert validate([rec], BENCH_REF, SCHEMA) == []
+    # skipped must be literally true
+    assert validate([{**rec, "skipped": False}], BENCH_REF, SCHEMA)
+
+
+def test_live_trace_records_validate(rng):
+    a = ((rng.random((48, 32)) < 0.1)
+         * rng.standard_normal((48, 32))).astype(np.float32)
+    csr = csr_from_dense(a)
+    _, plan = plan_and_convert(csr, total_workers=4)
+
+    rec = TraceRecorder(source="schema-test")
+    rec.record_spmm(csr, plan, wall_s=1e-4, n_cols=8, backend="jnp")
+    rec.record_spmm(csr, plan, wall_s=2e-4, n_cols=8, backend="interpret",
+                    kind="search_trial")
+    rec.record("step", part="step", op="train_step", step=0, wall_us=12.5)
+    rec.record("dispatch", part="csr", op="spmm", backend="jnp", impl="ref",
+               units=csr.nnz, batch=1, n=8)
+    assert validate(rec.records, TRACE_REF, SCHEMA) == []
+
+
+def test_trace_schema_rejects_unstamped_record():
+    rec = {"kind": "step", "source": "x", "part": "step", "op": "decode",
+           "step": 0, "wall_us": 1.0}   # no schema stamp
+    assert validate([rec], TRACE_REF, SCHEMA)

@@ -1,0 +1,96 @@
+"""Property-based invariants of the LOOPS format layer (hypothesis).
+
+Skipped at collection when hypothesis is absent (tests/conftest.py adds
+this module to ``collect_ignore``).  Three satellite invariants of ISSUE 6:
+
+  * panelize/depanelize round-trip: the ``(P, G)`` panel pack and its
+    gather/scatter maps are exact inverses on stored values;
+  * ``TransposedLoops`` double-transpose identity: (Aᵀ)ᵀ reconstructs A's
+    dense content bit-for-bit (structure moves, values never change);
+  * ``matrix_key`` (the trace-record fingerprint prefix) is invariant
+    under row permutation — two equal-row-stat matrices share trace cells.
+"""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import csr_from_dense, csr_to_dense
+from repro.core.formats import (bcsr_from_csr_rows, loops_from_csr,
+                                panelize_bcsr, panelize_csr, permute_rows)
+from repro.perf import matrix_key
+
+dims = st.integers(min_value=4, max_value=40)
+densities = st.sampled_from([0.05, 0.15, 0.4])
+seeds = st.integers(min_value=0, max_value=2**31 - 1)
+widths = st.sampled_from([1, 2, 4, 8])
+
+
+def _sparse(seed, m, k, density):
+    rng = np.random.default_rng(seed)
+    a = (rng.random((m, k)) < density) * rng.standard_normal((m, k))
+    return a.astype(np.float32)
+
+
+def _dense_of(fmt):
+    """Dense content of a LoopsFormat, reconstructed on the host (no
+    kernels): CSR part verbatim, BCSR tiles expanded at their (block-row,
+    column) coordinates.  Zero-valued pads add exact zeros."""
+    m, k = fmt.shape
+    out = np.zeros((m, k), np.float64)
+    if fmt.r_boundary > 0:
+        out[:fmt.r_boundary] = csr_to_dense(fmt.csr_part)
+    bc = fmt.bcsr_part
+    for t in range(bc.ntiles):
+        r0 = fmt.r_boundary + int(bc.tile_rows[t]) * bc.br
+        rows = np.arange(r0, min(r0 + bc.br, m))
+        out[rows, int(bc.tile_cols[t])] += bc.tile_vals[t, :len(rows)]
+    return out
+
+
+@given(seed=seeds, m=dims, k=dims, density=densities, g=widths)
+def test_panelize_csr_round_trip(seed, m, k, density, g):
+    csr = csr_from_dense(_sparse(seed, m, k, density))
+    panels = panelize_csr(csr, g)
+    # gather is the exact inverse of the pack on stored values (including
+    # the zero pads csr_from_dense inserts for empty rows) ...
+    np.testing.assert_array_equal(
+        np.asarray(panels.gather_values(np.asarray(panels.panel_vals))),
+        csr.vals)
+    # ... and scatter rebuilds the panel layout bit-for-bit, with padding
+    # lanes exactly zero.
+    import jax.numpy as jnp
+    rebuilt = np.asarray(panels.scatter_values(jnp.asarray(csr.vals)))
+    np.testing.assert_array_equal(rebuilt, np.asarray(panels.panel_vals))
+    # a row never shares a panel and every row appears
+    assert set(np.asarray(panels.panel_rows)) == set(range(csr.nrows))
+
+
+@given(seed=seeds, m=dims, k=dims, density=densities, g=widths)
+def test_panelize_bcsr_round_trip(seed, m, k, density, g):
+    csr = csr_from_dense(_sparse(seed, m, k, density))
+    bcsr = bcsr_from_csr_rows(csr, 0, csr.nrows, 8)
+    panels = panelize_bcsr(bcsr, g)
+    np.testing.assert_array_equal(
+        np.asarray(panels.gather_values(np.asarray(panels.panel_vals))),
+        bcsr.tile_vals)
+    import jax.numpy as jnp
+    rebuilt = np.asarray(panels.scatter_values(jnp.asarray(bcsr.tile_vals)))
+    np.testing.assert_array_equal(rebuilt, np.asarray(panels.panel_vals))
+
+
+@settings(max_examples=10)   # two transposed conversions per example
+@given(seed=seeds, m=dims, k=dims, density=densities)
+def test_double_transpose_identity(seed, m, k, density):
+    a = _sparse(seed, m, k, density)
+    csr = csr_from_dense(a)
+    fmt = loops_from_csr(csr, (csr.nrows // 2) // 8 * 8, 8)
+    tl = fmt.transposed(total_workers=4)
+    np.testing.assert_array_equal(_dense_of(tl.fmt), a.T.astype(np.float64))
+    tl2 = tl.fmt.transposed(total_workers=4)
+    np.testing.assert_array_equal(_dense_of(tl2.fmt), a.astype(np.float64))
+
+
+@given(seed=seeds, m=dims, k=dims, density=densities)
+def test_matrix_key_row_permutation_invariant(seed, m, k, density):
+    csr = csr_from_dense(_sparse(seed, m, k, density))
+    order = np.random.default_rng(seed + 1).permutation(csr.nrows)
+    assert matrix_key(permute_rows(csr, order)) == matrix_key(csr)

@@ -1,0 +1,130 @@
+"""CI perf gate: passes on the committed baseline, provably fails on an
+injected regression (the negative self-test), and enforces the per-metric
+tolerance classes (exact grid-step counts, near-exact derived ratios,
+banded wall-clock)."""
+import copy
+import json
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "tools"))
+
+import perf_gate  # noqa: E402
+
+BASELINE = ROOT / "benchmarks" / "results" / "BENCH_006.json"
+
+
+def _baseline():
+    with open(BASELINE) as f:
+        return json.load(f)
+
+
+def test_baseline_is_committed_and_nonempty():
+    recs = _baseline()
+    assert recs, "BENCH_006.json must hold the smoke-suite records"
+    suites = {r.get("suite") for r in recs}
+    assert "fig4_panel" in suites and "batched" in suites
+
+
+def test_gate_passes_on_itself():
+    assert perf_gate.run_gate(BASELINE, BASELINE, wall_tol=1.5) == []
+    assert perf_gate.diff_records(_baseline(), _baseline()) == []
+
+
+def test_gate_fails_on_injected_grid_step_regression():
+    """Negative self-test (ISSUE 6): a 2x grid-step regression in a
+    synthetic bench record must fail the gate."""
+    base = [{"suite": "batched", "batch": 4, "n_cols": 32, "panel_g": 8,
+             "grid_steps_loop": 160, "grid_steps_native": 40,
+             "step_reduction_vs_loop": 4.0, "fwd_us_loop": 100.0,
+             "fwd_us_vmap": 80.0, "fwd_us_native": 60.0,
+             "fwdbwd_us_loop": 300.0, "fwdbwd_us_vmap": 200.0,
+             "fwdbwd_us_native": 150.0}]
+    cur = copy.deepcopy(base)
+    cur[0]["grid_steps_native"] *= 2
+    fails = perf_gate.diff_records(base, cur)
+    assert fails and "grid_steps_native" in fails[0]
+    # An injected *improvement* also trips the exact class: the baseline is
+    # stale and must be refreshed explicitly, never drift silently.
+    cur2 = copy.deepcopy(base)
+    cur2[0]["grid_steps_native"] //= 2
+    assert perf_gate.diff_records(base, cur2)
+
+
+def test_gate_fails_on_committed_baseline_regression():
+    cur = _baseline()
+    victim = next(r for r in cur if r.get("suite") == "fig4_panel")
+    victim["steps_tuned"] *= 2
+    fails = perf_gate.diff_records(_baseline(), cur, wall_tol=float("inf"))
+    assert any("steps_tuned" in f for f in fails)
+
+
+def test_gate_fails_on_dropped_record_and_column():
+    base = _baseline()
+    cur = [r for r in base if r.get("suite") != "batched"]
+    assert any("missing" in f for f in perf_gate.diff_records(base, cur))
+
+    cur2 = copy.deepcopy(base)
+    rec = next(r for r in cur2 if r.get("suite") == "batched")
+    del rec["grid_steps_native"]
+    assert any("dropped" in f for f in perf_gate.diff_records(base, cur2))
+
+
+def test_wall_band_tolerance():
+    base = [{"suite": "fig4", "matrix": "m6", "dtype": "fp32", "panel_g": 8,
+             "nnz": 100, "us_per_call": 100.0, "gflops": 2.0,
+             "vs_taco": 1.5, "vs_dense": 0.5}]
+    cur = copy.deepcopy(base)
+    cur[0]["us_per_call"] = 500.0    # 5x slower: inside the 10x band
+    cur[0]["gflops"] = 0.4
+    assert perf_gate.diff_records(base, cur, wall_tol=10.0) == []
+    cur[0]["us_per_call"] = 2000.0   # 20x slower: outside
+    assert perf_gate.diff_records(base, cur, wall_tol=10.0)
+    # inf disables the wall class entirely (the CI cross-machine setting)
+    assert perf_gate.diff_records(base, cur,
+                                  wall_tol=float("inf")) == []
+
+
+def test_near_class_catches_ratio_drift():
+    base = [{"suite": "fig4_panel_geomean", "matrix": "geomean",
+             "dtype": "fp32", "step_reduction_g8": 7.21}]
+    cur = copy.deepcopy(base)
+    cur[0]["step_reduction_g8"] = 6.5
+    assert perf_gate.diff_records(base, cur)
+    assert perf_gate.diff_records(base, base) == []
+
+
+def test_skip_records_are_exempt():
+    base = [{"suite": "spmm_dryrun", "skipped": True, "reason": "no mesh"}]
+    assert perf_gate.diff_records(base, []) == []
+
+
+def test_schema_validation_is_part_of_the_gate(tmp_path):
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps([{"suite": "fig4", "matrix": "m6"}]))
+    fails = perf_gate.run_gate(BASELINE, bad, wall_tol=float("inf"))
+    assert any("schema violation" in f for f in fails)
+
+
+def test_cli_exit_codes(tmp_path):
+    ok = subprocess.run(
+        [sys.executable, str(ROOT / "tools" / "perf_gate.py"),
+         "--baseline", str(BASELINE), "--current", str(BASELINE),
+         "--wall-tol", "inf"], capture_output=True, text=True)
+    assert ok.returncode == 0, ok.stdout + ok.stderr
+
+    cur = _baseline()
+    next(r for r in cur if r.get("suite") == "batched")["grid_steps_native"] \
+        += 1
+    bad_path = tmp_path / "bench.json"
+    bad_path.write_text(json.dumps(cur))
+    bad = subprocess.run(
+        [sys.executable, str(ROOT / "tools" / "perf_gate.py"),
+         "--baseline", str(BASELINE), "--current", str(bad_path),
+         "--wall-tol", "inf"], capture_output=True, text=True)
+    assert bad.returncode == 1
+    assert "grid_steps_native" in bad.stdout

@@ -1,0 +1,334 @@
+"""Trace → fit → replay loop: recorder, structural step prediction, cost
+fit, and the replay-accuracy acceptance bar.
+
+The load-bearing claims:
+
+  * :func:`repro.perf.replay.predict_part_steps` reproduces the REAL
+    conversion's grid-step count exactly (per part, including empty-row
+    pads, zero-valued entry dropping, and skipped parts) without paying
+    Algorithm 1;
+  * ``replay()`` — per-step cost fitted from measured traces × predicted
+    steps — lands within 25% of measured step time for ≥ 90% of
+    (matrix, plan) cells on the interpret backend (the tentpole acceptance
+    criterion);
+  * the fig4 smoke suite is bit-deterministic in its grid-step columns
+    (what the perf gate's exact checks rely on cross-machine).
+"""
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (csr_from_coo, csr_from_dense, loops_spmm,
+                        plan_and_convert)
+from repro.core.formats import loops_from_csr
+from repro.core.spmm import SpmmPlan, loops_grid_steps
+from repro.kernels import engine
+from repro.perf import (TraceDB, TraceRecorder, fit_cost_model, load_traces,
+                        matrix_key, predict_grid_steps, predict_part_steps,
+                        replay)
+from repro.perf.trace import TRACE_SCHEMA_VERSION
+from repro.tune.search import SearchBudget, search
+
+
+def random_sparse(rng, m, k, density, dtype=np.float32):
+    a = (rng.random((m, k)) < density) * rng.standard_normal((m, k))
+    return a.astype(dtype)
+
+
+def _plan(csr, r_frac, g, br=8):
+    r_b = int(r_frac * csr.nrows) // br * br
+    return SpmmPlan(r_boundary=r_b, t_vpu=4, t_mxu=4, br=br, panel_g=g)
+
+
+# ---------------------------------------------------------------------------
+# Structural prediction == real conversion
+# ---------------------------------------------------------------------------
+
+def test_predict_part_steps_matches_conversion(rng):
+    n_cols = 16
+    for m, k, density in [(64, 48, 0.05), (96, 40, 0.15), (48, 48, 0.4)]:
+        csr = csr_from_dense(random_sparse(rng, m, k, density))
+        for r_frac in (0.0, 0.3, 0.7, 1.0):
+            for g in (1, 4, 8):
+                plan = _plan(csr, r_frac, g)
+                fmt = loops_from_csr(csr, plan.r_boundary, plan.br,
+                                     panel_g=plan.panel_g)
+                assert predict_grid_steps(csr, plan, n_cols) \
+                    == loops_grid_steps(fmt, n_cols), \
+                    f"mismatch at r_frac={r_frac} g={g} shape={(m, k)}"
+
+
+def test_predict_part_steps_drops_zero_valued_entries(rng):
+    # bcsr_from_csr_rows drops stored-but-zero entries; the predictor must
+    # count distinct columns among nonzero-VALUED entries only.
+    m = k = 48
+    rows = np.repeat(np.arange(m, dtype=np.int64), 3)
+    cols = np.tile(np.array([0, 7, 23], dtype=np.int64), m)
+    vals = rng.standard_normal(rows.shape[0]).astype(np.float32)
+    vals[::2] = 0.0   # half the stored entries are explicit zeros
+    csr = csr_from_coo(rows, cols, vals, (m, k))
+    for r_frac in (0.0, 0.5):
+        plan = _plan(csr, r_frac, 4)
+        fmt = loops_from_csr(csr, plan.r_boundary, plan.br,
+                             panel_g=plan.panel_g)
+        assert predict_grid_steps(csr, plan, 16) == loops_grid_steps(fmt, 16)
+
+
+def test_predict_part_steps_empty_rows(rng):
+    # Empty rows pad to one stored entry (CSR part) / one pad tile per
+    # empty block-row (BCSR part) — both floor at one panel.
+    m, k = 40, 32
+    rows = np.array([0, 0, 5], dtype=np.int64)   # rows 1-4, 6-39 empty
+    cols = np.array([1, 9, 2], dtype=np.int64)
+    vals = np.ones(3, np.float32)
+    csr = csr_from_coo(rows, cols, vals, (m, k))
+    for r_frac in (0.0, 0.4, 1.0):
+        plan = _plan(csr, r_frac, 8)
+        fmt = loops_from_csr(csr, plan.r_boundary, plan.br,
+                             panel_g=plan.panel_g)
+        assert predict_grid_steps(csr, plan, 16) == loops_grid_steps(fmt, 16)
+
+
+def test_predict_col_blocking():
+    csr = csr_from_dense(np.eye(16, dtype=np.float32))
+    plan = _plan(csr, 1.0, 1)
+    s1 = predict_grid_steps(csr, plan, 16)
+    # bn caps at 512, so 1024 columns = 2 column blocks
+    assert predict_grid_steps(csr, plan, 1024) == 2 * s1
+
+
+# ---------------------------------------------------------------------------
+# Recorder: dispatch capture, save/load round-trip, versioning
+# ---------------------------------------------------------------------------
+
+def test_recorder_round_trip(rng, tmp_path):
+    csr = csr_from_dense(random_sparse(rng, 48, 32, 0.1))
+    fmt, plan = plan_and_convert(csr, total_workers=4)
+    b = jnp.asarray(rng.standard_normal((32, 8)).astype(np.float32))
+
+    rec = TraceRecorder(source="unit")
+    with rec.attach_engine():
+        assert engine.get_tracer() is rec
+        out = jax.jit(lambda bb: loops_spmm(fmt, bb, backend="jnp"))(b)
+        jax.block_until_ready(out)
+    assert engine.get_tracer() is None   # restored on exit
+
+    dispatches = [r for r in rec.records if r["kind"] == "dispatch"]
+    assert dispatches and all(r["part"] in ("csr", "bcsr")
+                              for r in dispatches)
+    rec.record_spmm(csr, plan, wall_s=1e-4, n_cols=8, backend="jnp")
+
+    path = rec.save(tmp_path / "unit.jsonl")
+    loaded = load_traces(path)
+    assert loaded == rec.records
+    assert all(r["schema"] == TRACE_SCHEMA_VERSION and r["source"] == "unit"
+               for r in loaded)
+
+
+def test_load_traces_rejects_future_schema(tmp_path):
+    p = tmp_path / "future.jsonl"
+    p.write_text(json.dumps({"schema": 99, "kind": "spmm"}) + "\n")
+    with pytest.raises(ValueError, match="schema"):
+        load_traces(p)
+
+
+def test_record_rejects_unknown_kind():
+    with pytest.raises(ValueError, match="kind"):
+        TraceRecorder().record("wall_clock")
+
+
+def test_wrap_step_counts_calls():
+    rec = TraceRecorder(source="steps")
+    f = rec.wrap_step(jax.jit(lambda x: x * 2.0), op="train_step")
+    for _ in range(3):
+        f(jnp.ones((4,)))
+    steps = [r for r in rec.records if r["kind"] == "step"]
+    assert [r["step"] for r in steps] == [0, 1, 2]
+    assert all(r["op"] == "train_step" and r["wall_us"] >= 0 for r in steps)
+
+
+def test_matrix_key_ignores_values(rng):
+    a = random_sparse(rng, 64, 48, 0.1)
+    csr1 = csr_from_dense(a)
+    csr2 = csr_from_dense(np.where(a != 0, 3.5, 0.0).astype(np.float32))
+    assert matrix_key(csr1) == matrix_key(csr2)
+
+
+# ---------------------------------------------------------------------------
+# Cost-model fit from traces
+# ---------------------------------------------------------------------------
+
+def _synth_spmm(x, y, g, gflops):
+    return {"schema": 1, "kind": "spmm", "source": "synth", "t_vpu": x,
+            "t_mxu": y, "panel_g": g, "gflops": gflops}
+
+
+def test_fit_cost_model_recovers_surface():
+    def perf(x, y):
+        return 10.0 + 2.0 * x + 3.0 * y - 0.05 * x * x - 0.04 * y * y
+
+    recs = [_synth_spmm(x, y, 1, perf(x, y))
+            for x in (1, 2, 4, 6, 8) for y in (1, 3, 5)]
+    model = fit_cost_model(recs, ridge=1e-9)
+    assert model is not None
+    assert model.calibrated_from.startswith("traces:")
+    for x, y in [(3, 2), (5, 4)]:
+        assert float(model.predict(x, y)) == pytest.approx(perf(x, y),
+                                                           rel=0.05)
+
+
+def test_fit_cost_model_underdetermined_returns_none():
+    recs = [_synth_spmm(1, 1, 1, 5.0), _synth_spmm(2, 2, 1, 7.0)]
+    assert fit_cost_model(recs) is None
+    assert fit_cost_model([]) is None
+
+
+# ---------------------------------------------------------------------------
+# Replay accuracy — the tentpole acceptance criterion
+# ---------------------------------------------------------------------------
+
+def _measured_wall(f, b, repeats=5):
+    """Best-of-N wall clock: timing noise (scheduler preemption, other
+    suite processes) is strictly additive, so the minimum is the robust
+    estimator of the true step cost — a median still drifts when the
+    machine is loaded for the whole window."""
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(f(b))
+        ts.append(time.perf_counter() - t0)
+    return min(ts)
+
+
+def test_replay_predicts_step_time_within_25pct(rng):
+    """replay() must land within 25% of measured interpret-mode step time
+    for >= 90% of (matrix, plan) cells (ISSUE 6 acceptance).
+
+    Wall clocks are best-of-5 per pass; if the fit misses the bar the
+    cells are remeasured (up to 2 extra passes, keeping the per-cell
+    minimum) so one load spike during the first sweep cannot flake the
+    suite — the *model* is deterministic given the walls.
+    """
+    n_cols = 16
+    mats = [csr_from_dense(random_sparse(rng, 64, 48, 0.08)),
+            csr_from_dense(random_sparse(rng, 96, 48, 0.18))]
+    cells = []
+    for csr in mats:
+        b = jnp.asarray(rng.standard_normal((csr.shape[1], n_cols))
+                        .astype(np.float32))
+        for r_frac, g in [(0.25, 1), (0.25, 8), (0.75, 1), (0.75, 8),
+                          (0.5, 4)]:
+            plan = _plan(csr, r_frac, g)
+            fmt = loops_from_csr(csr, plan.r_boundary, plan.br,
+                                 panel_g=plan.panel_g)
+            f = jax.jit(lambda bb, fmt=fmt: loops_spmm(
+                fmt, bb, backend="interpret"))
+            jax.block_until_ready(f(b))   # compile + warm
+            cells.append({"csr": csr, "plan": plan, "f": f, "b": b,
+                          "wall": np.inf})
+
+    def sweep():
+        for c in cells:
+            c["wall"] = min(c["wall"], _measured_wall(c["f"], c["b"]))
+        rec = TraceRecorder(source="replay-test")
+        for c in cells:
+            rec.record_spmm(c["csr"], c["plan"], wall_s=c["wall"],
+                            n_cols=n_cols, backend="interpret")
+        db = TraceDB(records=rec.records)
+        assert db.step_cost("interpret") is not None
+        errs = []
+        for c in cells:
+            pred = replay(c["plan"], db, csr=c["csr"], n_cols=n_cols,
+                          backend="interpret")
+            assert pred is not None and pred >= 0
+            errs.append(abs(pred - c["wall"]) / c["wall"])
+        return errs
+
+    for _ in range(3):
+        errs = sweep()
+        ok = sum(e <= 0.25 for e in errs)
+        if ok / len(cells) >= 0.9:
+            break
+    assert ok / len(cells) >= 0.9, \
+        f"replay within 25% for only {ok}/{len(cells)} cells: " \
+        f"{[f'{e:.2f}' for e in errs]}"
+
+
+def test_replay_returns_none_without_fit(rng):
+    csr = csr_from_dense(random_sparse(rng, 32, 32, 0.1))
+    assert replay(_plan(csr, 0.5, 4), TraceDB(records=[]), csr=csr,
+                  n_cols=8) is None
+
+
+# ---------------------------------------------------------------------------
+# Integration: search pruning + device-split prediction + fig4 determinism
+# ---------------------------------------------------------------------------
+
+def _db_with_step_costs():
+    # wall_us = 5 + 2*s_csr + 1*s_bcsr, three distinct cells
+    recs = []
+    for s_csr, s_bcsr in [(10, 0), (0, 20), (15, 30)]:
+        recs.append({"schema": 1, "kind": "spmm", "source": "synth",
+                     "backend": "jnp", "grid_steps": s_csr + s_bcsr,
+                     "grid_steps_csr": s_csr, "grid_steps_bcsr": s_bcsr,
+                     "wall_us": 5.0 + 2.0 * s_csr + 1.0 * s_bcsr})
+    return TraceDB(records=recs)
+
+
+def test_trace_db_step_cost_fit():
+    coef = _db_with_step_costs().step_cost("jnp")
+    assert coef is not None
+    assert coef[1] == pytest.approx(2.0, rel=0.1)
+    assert coef[2] == pytest.approx(1.0, rel=0.1)
+
+
+def test_search_with_trace_db_and_recorder(rng):
+    csr = csr_from_dense(random_sparse(rng, 48, 32, 0.1))
+    rec = TraceRecorder(source="search")
+    res = search(csr, n_cols=8, total_workers=4,
+                 budget=SearchBudget(top_k=2, repeats=1, warmup=0),
+                 backend="jnp", trace_db=_db_with_step_costs(), recorder=rec)
+    assert res.plan is not None and res.measured >= 1
+    trials = [r for r in rec.records if r["kind"] == "search_trial"]
+    assert len(trials) == res.measured
+    assert all(r["grid_steps"] > 0 and r["panel_g"] >= 1 for r in trials)
+
+
+def test_shard_loops_auto_accepts_trace_db(rng):
+    from repro.core.distributed import shard_loops_auto
+
+    csr = csr_from_dense(random_sparse(rng, 64, 48, 0.1))
+    fmt, _ = plan_and_convert(csr, total_workers=8)
+    # Rich db: enough distinct (t_vpu, t_mxu) knobs to fit Eq. 2.
+    recs = [_synth_spmm(x, y, 1, 1.0 * x + 4.0 * y)
+            for x in (1, 2, 4, 6, 8) for y in (1, 3, 5)]
+    sharded = shard_loops_auto(fmt, 8, trace_db=TraceDB(records=recs))
+    assert sharded.g_vpu >= 0
+    # Empty db: falls back to the proportional split without error.
+    sharded2 = shard_loops_auto(fmt, 8, trace_db=TraceDB(records=[]))
+    assert sharded2.g_vpu >= 0
+
+
+def test_fig4_smoke_grid_steps_deterministic(monkeypatch):
+    """Two runs of the fig4 smoke suite must emit identical grid-step
+    columns — the property the perf gate's exact checks rely on."""
+    from benchmarks import fig4_throughput as f4
+
+    monkeypatch.setattr(f4, "SMOKE_MATRICES", ["m6"])
+    monkeypatch.setattr(f4, "WALL_MATRICES", 0)   # structural columns only
+
+    exact = ("suite", "matrix", "panel_g", "nnz", "steps_g1", "steps_g8",
+             "steps_tuned")
+
+    def run_once():
+        recs = []
+        f4.main(out=lambda s: None, record=recs.append, smoke=True)
+        return [{k: r[k] for k in exact if k in r} for r in recs]
+
+    first, second = run_once(), run_once()
+    assert first == second
+    assert any("steps_g1" in r for r in first)
