@@ -11,7 +11,9 @@ For each Table-2-like matrix, plan twice:
 then time the hybrid execution of both plans and report throughputs side by
 side.  A second pass over the same matrices demonstrates the amortisation
 claim: every lookup is a cache hit, zero measurements, and the hit rate is
-printed as its own CSV row.
+printed as its own CSV row and recorded into bench.json (the
+``autotune_cache_record`` columns of ``bench_schema.json``) so the perf
+trajectory tracks cache effectiveness alongside throughput.
 
 The cache lives in a temp directory by default so benchmark runs are
 hermetic; set ``REPRO_TUNE_CACHE`` to persist plans across runs instead.
@@ -39,7 +41,7 @@ def _throughput(fmt, b, nnz: int) -> float:
     return gflops(nnz, N, time_fn(f, b, repeats=5, warmup=1))
 
 
-def main(out=print, scale_rows: int = 512):
+def main(out=print, scale_rows: int = 512, record=None):
     cache_dir = os.environ.get("REPRO_TUNE_CACHE") or tempfile.mkdtemp(
         prefix="repro-tune-bench-")
     cache = PlanCache(cache_dir)
@@ -71,13 +73,22 @@ def main(out=print, scale_rows: int = 512):
         autotune(csr, n_cols=N, cache=cache, budget=budget, backend="jnp")
     assert cache.stats.misses == before, "second pass must not search"
     sp = np.asarray(speedups)
-    out(csv_row("autotune_geomean", 0.0,
-                f"tuned_vs_model={np.exp(np.log(sp).mean()):.2f}x"))
+    geomean = float(np.exp(np.log(sp).mean()))
+    out(csv_row("autotune_geomean", 0.0, f"tuned_vs_model={geomean:.2f}x"))
     out(csv_row("autotune_cache", 0.0,
                 f"hits={cache.stats.hits};near={cache.stats.near_hits};"
                 f"misses={cache.stats.misses};"
                 f"hit_rate={cache.stats.hit_rate:.2f};"
                 f"stored={len(cache)}"))
+    if record is not None:
+        # bench.json row (schema: autotune_cache_record) — the hit-rate
+        # columns the perf trajectory tracks alongside the CSV.
+        record({"suite": "autotune", "matrix": "cache",
+                "hits": cache.stats.hits, "near_hits": cache.stats.near_hits,
+                "misses": cache.stats.misses,
+                "hit_rate": round(cache.stats.hit_rate, 4),
+                "stored": len(cache),
+                "tuned_vs_model_geomean": round(geomean, 4)})
 
 
 if __name__ == "__main__":

@@ -36,10 +36,15 @@ copies the freshly merged bench.json over F instead (refreshing the
 committed BENCH_<PR>.json after an intentional change).  ``--trace``
 records a perf trace (engine dispatches + per-matrix SpMM wall-clock) to
 benchmarks/results/traces/<source>.jsonl for replay/cost-model fitting.
+``--obs-trace`` additionally captures the run with ``repro.obs`` (per-suite
+spans + engine dispatch counters) to benchmarks/results/obs/ in the same
+JSONL schema live ``--obs`` runs use, so ``tools/obs_report.py`` renders
+benchmark and serving captures interchangeably.
 """
 from __future__ import annotations
 
 import argparse
+import contextlib
 import inspect
 import json
 import os
@@ -84,6 +89,12 @@ def main() -> None:
     ap.add_argument("--trace", action="store_true",
                     help="record a perf trace (engine dispatch + SpMM "
                          "wall-clock) to benchmarks/results/traces/")
+    ap.add_argument("--obs-trace", action="store_true",
+                    help="capture the run with repro.obs (per-suite spans, "
+                         "engine dispatch counters) to "
+                         "benchmarks/results/obs/ — same JSONL schema as "
+                         "live-run --obs captures, so obs_report.py and "
+                         "diff tooling treat them interchangeably")
     ap.add_argument("--baseline", nargs="?", const=DEFAULT_BASELINE,
                     default=None, metavar="F",
                     help="after the run, gate the merged bench.json against "
@@ -111,6 +122,11 @@ def main() -> None:
     if args.trace:
         from repro.perf.trace import TraceRecorder
         recorder = TraceRecorder(source="bench-" + "-".join(chosen))
+    obs = None
+    if args.obs_trace:
+        from repro.obs import Obs, set_active
+        obs = Obs(source="bench-" + "-".join(chosen))
+        set_active(obs)
 
     def emit(line: str):
         print(line, flush=True)
@@ -129,10 +145,15 @@ def main() -> None:
         if recorder is not None and "recorder" in params:
             kwargs["recorder"] = recorder
         try:
-            if recorder is not None:
-                with recorder.attach_engine():
-                    fn(out=emit, **kwargs)
-            else:
+            with contextlib.ExitStack() as stack:
+                if recorder is not None:
+                    stack.enter_context(recorder.attach_engine())
+                if obs is not None:
+                    # obs chains onto the recorder's tracer, so --trace and
+                    # --obs-trace compose (both see every dispatch)
+                    stack.enter_context(obs.attach_engine())
+                    stack.enter_context(obs.span(f"suite.{name}",
+                                                 cat="bench"))
                 fn(out=emit, **kwargs)
         except Exception:
             failures += 1
@@ -154,6 +175,12 @@ def main() -> None:
         json.dump(kept + records, f, indent=1, sort_keys=True)
     if recorder is not None and recorder.records:
         print(f"trace: {recorder.save()}", flush=True)
+    if obs is not None:
+        from repro.obs import set_active
+        jsonl, chrome = obs.save()
+        print(f"obs: {jsonl}", flush=True)
+        print(f"obs: {chrome}", flush=True)
+        set_active(None)
     if failures:
         sys.exit(1)
 

@@ -64,12 +64,32 @@ def compressed_psum(x: jax.Array, axis_name: str,
     ``"none"`` (plain fp32 psum — the ablation baseline).
 
     Must be called inside ``shard_map`` (it uses named-axis collectives).
+
+    When a live obs capture is active (``repro.obs.set_active``), each call
+    site reports its per-device wire bytes — ``4n`` fp32, ``2n`` bf16,
+    ``n + 4n/D`` int8 — to the ``dist.collective_bytes`` gauge.  The shapes
+    (and therefore the bytes) are static, so this fires at trace time: it
+    is a bytes-per-call figure, not an execution counter.
     """
     D = jax.lax.psum(1, axis_name)
+    if precision not in ("none", "bf16", "int8"):
+        raise ValueError(f"unknown compression precision: {precision!r}")
+    n = x.size
+    _note_bytes(0 if D == 1 else
+                {"none": 4 * n, "bf16": 2 * n,
+                 "int8": n + 4 * n // D}[precision], precision)
     if precision == "none" or D == 1:
         return jax.lax.psum(x, axis_name)
     if precision == "bf16":
         return jax.lax.psum(x.astype(jnp.bfloat16), axis_name).astype(x.dtype)
-    if precision != "int8":
-        raise ValueError(f"unknown compression precision: {precision!r}")
     return _int8_psum(x, axis_name, D)
+
+
+def _note_bytes(nbytes: int, precision: str) -> None:
+    """Report one call site's wire bytes to the active obs capture (no-op
+    without one; lazy import keeps ``repro.obs`` optional here)."""
+    try:
+        from ..obs.runtime import note_collective
+    except ImportError:     # pragma: no cover - obs is part of the tree
+        return
+    note_collective(int(nbytes), kind="psum", precision=precision)

@@ -109,25 +109,33 @@ def _flat_zeros(params_avals, n_shards: int):
         params_avals)
 
 
-def _maybe_record(fn, recorder, op: str):
-    """Wrap a jitted step fn with the perf-trace recorder (no-op without
-    one): each call blocks on its outputs and lands one ``step`` record
-    (``repro.perf.trace.TraceRecorder.wrap_step``)."""
-    if recorder is None:
-        return fn
-    return recorder.wrap_step(fn, op=op)
+def _maybe_record(fn, recorder, op: str, obs=None):
+    """Wrap a jitted step fn with the perf-trace recorder and/or a live
+    obs capture (no-op without either).  ``recorder``
+    (``repro.perf.trace.TraceRecorder.wrap_step``) lands one ``step``
+    trace record per call; ``obs`` (``repro.obs.Obs.wrap_step``) runs the
+    call under a span and feeds the ``step.wall_us{op=...}`` latency
+    histogram.  Both block on the outputs; obs wraps outermost so its span
+    brackets the recorder's timing too."""
+    if recorder is not None:
+        fn = recorder.wrap_step(fn, op=op)
+    if obs is not None:
+        fn = obs.wrap_step(fn, op=op)
+    return fn
 
 
 def build_train_step(cfg: ModelConfig, mesh: Mesh, params_avals, batch_avals,
                      opt: OptConfig, *, n_microbatches: int = 1,
                      loss_fn: Callable | None = None,
-                     recorder=None) -> StepBundle:
+                     recorder=None, obs=None) -> StepBundle:
     """Build the jitted grad-accumulating ZeRO-1 train step for ``cfg``.
 
     ``loss_fn(params, microbatch) -> (loss, aux)`` defaults to the family-
     dispatched ``models.api.train_loss``.  ``recorder`` — a
     :class:`repro.perf.trace.TraceRecorder` — wraps the returned step so
-    every call appends a per-step wall-clock trace record.
+    every call appends a per-step wall-clock trace record; ``obs`` — a
+    :class:`repro.obs.Obs` — additionally spans each call and feeds the
+    live ``step.wall_us{op=train_step}`` latency histogram.
     """
     loss_fn = loss_fn or (lambda p, mb: api.train_loss(cfg, p, mb))
     p_spec = shr.param_specs(params_avals, mesh, cfg)
@@ -166,19 +174,19 @@ def build_train_step(cfg: ModelConfig, mesh: Mesh, params_avals, batch_avals,
     rep = NamedSharding(mesh, P())
     fn = jax.jit(step, in_shardings=(psh, osh, bsh),
                  out_shardings=(psh, osh, rep), donate_argnums=(0, 1))
-    return StepBundle(fn=_maybe_record(fn, recorder, "train_step"),
+    return StepBundle(fn=_maybe_record(fn, recorder, "train_step", obs),
                       param_spec=p_spec, opt_spec=o_spec,
                       batch_spec=b_spec, n_microbatches=n_mb)
 
 
 def build_prefill(cfg: ModelConfig, mesh: Mesh, params_avals, batch_avals,
-                  *, recorder=None):
+                  *, recorder=None, obs=None):
     """Jitted prefill: ``fn(params, batch) -> (cache, last_logits)``.
 
     Returns ``(fn, param_spec, cache_spec)``; the cache comes out already
     sharded per :func:`repro.dist.sharding.cache_specs`, so the decode step
-    built against it never reshards.  ``recorder`` traces per-call wall
-    clock like :func:`build_train_step`.
+    built against it never reshards.  ``recorder``/``obs`` trace per-call
+    wall clock like :func:`build_train_step`.
     """
     p_spec = shr.param_specs(params_avals, mesh, cfg)
     b_spec = shr.prefill_batch_specs(batch_avals, mesh)
@@ -194,17 +202,17 @@ def build_prefill(cfg: ModelConfig, mesh: Mesh, params_avals, batch_avals,
                       shr.spec_to_sharding(b_spec, mesh)),
         out_shardings=(shr.spec_to_sharding(c_spec, mesh),
                        NamedSharding(mesh, shr.logits_spec(mesh))))
-    return _maybe_record(fn, recorder, "prefill"), p_spec, c_spec
+    return _maybe_record(fn, recorder, "prefill", obs), p_spec, c_spec
 
 
 def build_serve_step(cfg: ModelConfig, mesh: Mesh, params_avals, cache_avals,
-                     *, recorder=None):
+                     *, recorder=None, obs=None):
     """Jitted single-token decode:
     ``fn(params, cache, tokens, length) -> (cache, logits)`` with the cache
     donated (decode is a pure cache update — the old buffers are dead).
 
-    Returns ``(fn, param_spec, cache_spec)``.  ``recorder`` traces per-call
-    wall clock like :func:`build_train_step`.
+    Returns ``(fn, param_spec, cache_spec)``.  ``recorder``/``obs`` trace
+    per-call wall clock like :func:`build_train_step`.
     """
     p_spec = shr.param_specs(params_avals, mesh, cfg)
     c_spec = shr.cache_specs(cache_avals, mesh, cfg)
@@ -221,4 +229,4 @@ def build_serve_step(cfg: ModelConfig, mesh: Mesh, params_avals, cache_avals,
         out_shardings=(shr.spec_to_sharding(c_spec, mesh),
                        NamedSharding(mesh, shr.logits_spec(mesh))),
         donate_argnums=(1,))
-    return _maybe_record(fn, recorder, "decode"), p_spec, c_spec
+    return _maybe_record(fn, recorder, "decode", obs), p_spec, c_spec

@@ -220,8 +220,19 @@ def get_tracer():
 
 
 def _note(part: str, op: str, **fields) -> None:
-    if _TRACER is not None:
-        _TRACER.on_dispatch(part=part, op=op, **fields)
+    if _TRACER is None:
+        return
+    if "steps" not in fields:
+        # Grid steps this dispatch walks: panels × batch groups for the
+        # Pallas kernels (the flat batch is already padded to a multiple of
+        # its block), or plain units for the gather-based references.
+        units = int(fields.get("units", 0))
+        nb = int(fields.get("batch", 1))
+        if fields.get("impl") == "ref":
+            fields["steps"] = units
+        else:
+            fields["steps"] = units * max(-(-nb // batch_block(nb)), 1)
+    _TRACER.on_dispatch(part=part, op=op, **fields)
 
 
 # ---------------------------------------------------------------------------

@@ -6,14 +6,26 @@ Uses the two compiled halves from ``repro.dist.step``:
 cache's sequence axis is grown once to prompt+gen length — decode then runs
 allocation-free.
 
+Observability (``--obs``): the run is captured by a :class:`repro.obs.Obs`
+— engine dispatch counters via the kernel-registry tracer hook, per-request
+prefill latency and per-token decode latency histograms (the exact
+accounting the ROADMAP's admission-control item consumes), spans around
+every phase, and a LOOPS plan-cache warm-up for the model's FFN weight
+shapes (the "warm plan-cache pool" half of continuous batching: the tuner
+search is paid before traffic, never on the hot path, and the cache hit
+rate is exported as ``tune.cache.*`` gauges).  The capture saves a
+versioned JSONL plus a Perfetto-loadable Chrome trace under
+``benchmarks/results/obs/``; render either with ``tools/obs_report.py``.
+
 Demonstrates the serving path end-to-end on CPU with a reduced config:
 
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --reduced \
-      --batch 4 --prompt-len 32 --gen-len 16
+      --batch 4 --prompt-len 32 --gen-len 16 --obs
 """
 from __future__ import annotations
 
 import argparse
+import contextlib
 import time
 
 import jax
@@ -21,8 +33,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs import REDUCED, get_config
-from ..configs.base import ShapeConfig
-from ..dist import sharding as shr
 from ..dist import step as step_lib
 from ..models import api, frontends
 from .mesh import make_test_mesh
@@ -45,6 +55,52 @@ def pad_cache(cfg, cache, max_len: int):
     return jax.tree_util.tree_map_with_path(leaf, cache)
 
 
+def warm_spmm_plan_cache(cfg, params, obs, *, sparsity: float = 0.9,
+                         n_cols: int = 8):
+    """Warm the LOOPS plan cache for this model's FFN weight shapes.
+
+    The "warm plan-cache pool" prerequisite of continuous batching
+    (ROADMAP item 1): magnitude-prune each layer's FFN weight, tune-or-
+    fetch its execution plan through the persistent cache, and run one
+    engine SpMM per layer to validate the plan.  Same-shaped layers
+    fingerprint alike, so layer 0 pays the (budgeted) search and every
+    later layer is a cache hit — the hit rate lands in the obs capture's
+    ``tune.cache.*`` gauges, and each validation SpMM lands in the
+    ``engine.dispatch`` counters.  Families without a stacked dense FFN
+    (MoE/SSM variants) warm a synthetic ``(4*d_model, d_model)`` matrix of
+    the same sparsity instead.
+    """
+    from ..core.formats import csr_from_dense
+    from ..core.spmm import loops_spmm
+    from ..models.sparse_ffn import magnitude_prune
+    from ..tune import PlanCache, SearchBudget, autotune
+
+    cache = PlanCache()
+    cache.stats.reset()
+    obs.watch_cache(cache, name="serve-warm")
+    budget = SearchBudget(top_k=2, repeats=1, warmup=0)
+
+    mlp = params.get("layers", {}).get("mlp") if isinstance(params, dict) \
+        else None
+    if mlp is not None and "wi" in mlp and np.asarray(mlp["wi"]).ndim == 3:
+        weights = [np.asarray(w).T for w in np.asarray(mlp["wi"],
+                                                       np.float32)]
+    else:
+        rng = np.random.default_rng(0)
+        d = cfg.d_model
+        weights = [rng.standard_normal((4 * d, d)).astype(np.float32)]
+
+    for i, w in enumerate(weights):
+        with obs.span("serve.warm_plan", cat="warm", layer=i):
+            csr = csr_from_dense(magnitude_prune(w, sparsity))
+            fmt, _plan = autotune(csr, n_cols=n_cols, cache=cache,
+                                  budget=budget, backend="jnp")
+            x = jnp.ones((csr.ncols, n_cols), jnp.float32)
+            jax.block_until_ready(loops_spmm(fmt, x))
+    obs.gauge("serve.warm_layers").set(len(weights))
+    return cache
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -56,7 +112,22 @@ def main():
     ap.add_argument("--mesh-model", type=int, default=1)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--obs", nargs="?", const="serve", default=None,
+                    metavar="STEM",
+                    help="capture runtime metrics/spans; writes STEM.jsonl "
+                         "+ STEM.trace.json (Chrome/Perfetto) under "
+                         "--obs-dir (default benchmarks/results/obs/)")
+    ap.add_argument("--obs-dir", default=None, metavar="DIR",
+                    help="override the obs output directory")
+    ap.add_argument("--no-warm-spmm-cache", action="store_true",
+                    help="skip the LOOPS plan-cache warm-up under --obs")
     args = ap.parse_args()
+
+    obs = None
+    if args.obs:
+        from ..obs import Obs, set_active
+        obs = Obs(source=args.obs)
+        set_active(obs)
 
     cfg = REDUCED[args.arch]() if args.reduced else get_config(args.arch)
     mesh = make_test_mesh(args.mesh_data, args.mesh_model)
@@ -75,40 +146,76 @@ def main():
                        params)
     bav = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
                        batch)
-    prefill_fn, _, _ = step_lib.build_prefill(cfg, mesh, pav, bav)
-    t0 = time.time()
-    cache, logits = prefill_fn(params, batch)
-    extra = cfg.num_patches if cfg.frontend == "vision_stub" else 0
-    cache = pad_cache(cfg, cache, max_len + extra)
-    cav = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
-                       cache)
-    serve_fn, _, _ = step_lib.build_serve_step(cfg, mesh, pav, cav)
-    t_prefill = time.time() - t0
 
-    def sample(lg, k):
-        if args.temperature <= 0:
-            return jnp.argmax(lg, axis=-1)
-        return jax.random.categorical(k, lg / args.temperature, axis=-1)
+    engine_ctx = obs.attach_engine() if obs else contextlib.nullcontext()
+    with engine_ctx:
+        if obs is not None and not args.no_warm_spmm_cache:
+            warm_spmm_plan_cache(cfg, params, obs)
 
-    toks = sample(logits, key)[:, None].astype(jnp.int32)
-    out_tokens = [toks]
-    # prefill offset: vlm prefixes shift absolute positions
-    pos0 = args.prompt_len + (cfg.num_patches
-                              if cfg.frontend == "vision_stub" else 0)
-    t0 = time.time()
-    for i in range(args.gen_len - 1):
-        cache, logits = serve_fn(params, cache, toks,
-                                 jnp.int32(pos0 + i))
-        key, sub = jax.random.split(key)
-        toks = sample(logits, sub)[:, None].astype(jnp.int32)
-        out_tokens.append(toks)
-    t_decode = time.time() - t0
+        prefill_fn, _, _ = step_lib.build_prefill(cfg, mesh, pav, bav,
+                                                  obs=obs)
+        t0 = time.perf_counter()
+        cache, logits = prefill_fn(params, batch)
+        jax.block_until_ready(logits)
+        t_pf_call = time.perf_counter() - t0
+        if obs is not None:
+            # Every request in the coalesced batch experienced the batch
+            # call's latency — one observation per request, the accounting
+            # admission control will consume.
+            pf_hist = obs.histogram("serve.prefill_us")
+            for _ in range(args.batch):
+                pf_hist.observe(t_pf_call * 1e6)
+            obs.counter("serve.requests").inc(args.batch)
+        extra = cfg.num_patches if cfg.frontend == "vision_stub" else 0
+        cache = pad_cache(cfg, cache, max_len + extra)
+        cav = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                           cache)
+        serve_fn, _, _ = step_lib.build_serve_step(cfg, mesh, pav, cav,
+                                                   obs=obs)
+        t_prefill = time.perf_counter() - t0
+
+        def sample(lg, k):
+            if args.temperature <= 0:
+                return jnp.argmax(lg, axis=-1)
+            return jax.random.categorical(k, lg / args.temperature, axis=-1)
+
+        toks = sample(logits, key)[:, None].astype(jnp.int32)
+        out_tokens = [toks]
+        # prefill offset: vlm prefixes shift absolute positions
+        pos0 = args.prompt_len + (cfg.num_patches
+                                  if cfg.frontend == "vision_stub" else 0)
+        tok_hist = obs.histogram("serve.decode_token_us") if obs else None
+        t0 = time.perf_counter()
+        for i in range(args.gen_len - 1):
+            t_step = time.perf_counter()
+            cache, logits = serve_fn(params, cache, toks,
+                                     jnp.int32(pos0 + i))
+            key, sub = jax.random.split(key)
+            toks = sample(logits, sub)[:, None].astype(jnp.int32)
+            jax.block_until_ready(toks)
+            if tok_hist is not None:
+                # per-token decode latency: the step's wall clock is what a
+                # request waits for its next token
+                tok_hist.observe((time.perf_counter() - t_step) * 1e6)
+            out_tokens.append(toks)
+        t_decode = time.perf_counter() - t0
 
     gen = np.concatenate([np.asarray(t) for t in out_tokens], axis=1)
     tps = args.batch * (args.gen_len - 1) / max(t_decode, 1e-9)
     print(f"prefill {args.batch}x{args.prompt_len} in {t_prefill:.2f}s; "
           f"decoded {args.gen_len - 1} steps at {tps:.1f} tok/s")
     print("generated token ids (first row):", gen[0][:16])
+
+    if obs is not None:
+        from ..obs import set_active
+        obs.gauge("serve.tokens_per_s").set(tps)
+        obs.counter("serve.tokens_generated").inc(
+            args.batch * len(out_tokens))
+        jsonl, chrome = obs.save(args.obs_dir, stem=args.obs)
+        print(f"obs: {jsonl}")
+        print(f"obs: {chrome}  (load in ui.perfetto.dev)")
+        print(f"obs summary: {obs.summary()}")
+        set_active(None)
 
 
 if __name__ == "__main__":

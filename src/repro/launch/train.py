@@ -16,6 +16,12 @@ Fault tolerance contract:
     ``--max-step-seconds`` watchdog here) can kill and restart a hung run —
     combined with atomic checkpoints this is the whole crash-recovery story.
 
+Observability: ``--obs`` captures the run with :class:`repro.obs.Obs` —
+per-step latency histogram (``step.wall_us{op=train_step}`` via the step
+builder), engine dispatch counters, a ``train.steps_per_s`` gauge — and
+saves a versioned JSONL + Chrome trace under ``benchmarks/results/obs/``
+(render with ``tools/obs_report.py``).
+
 Example (CPU, reduced config):
   PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b --reduced \
       --steps 20 --seq-len 64 --global-batch 8 --mesh-data 1 --mesh-model 1
@@ -23,6 +29,7 @@ Example (CPU, reduced config):
 from __future__ import annotations
 
 import argparse
+import contextlib
 import math
 import os
 import time
@@ -61,11 +68,23 @@ def build_args():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--max-step-seconds", type=float, default=0,
                     help="watchdog: abort if one step exceeds this")
+    ap.add_argument("--obs", nargs="?", const="train", default=None,
+                    metavar="STEM",
+                    help="capture runtime metrics/spans; writes STEM.jsonl "
+                         "+ STEM.trace.json (Chrome/Perfetto) under "
+                         "--obs-dir (default benchmarks/results/obs/)")
+    ap.add_argument("--obs-dir", default=None, metavar="DIR",
+                    help="override the obs output directory")
     return ap.parse_args()
 
 
 def main():
     args = build_args()
+    obs = None
+    if args.obs:
+        from ..obs import Obs, set_active
+        obs = Obs(source=args.obs)
+        set_active(obs)
     cfg = REDUCED[args.arch]() if args.reduced else get_config(args.arch)
     mesh = make_test_mesh(args.mesh_data, args.mesh_model)
     n_devices = args.mesh_data * args.mesh_model
@@ -81,7 +100,7 @@ def main():
     bav = jax.eval_shape(
         lambda: global_batch_at(data_cfg, cfg, shape, n_mb, 0))
     bundle = step_lib.build_train_step(cfg, mesh, pav, bav, opt_cfg,
-                                       n_microbatches=n_mb)
+                                       n_microbatches=n_mb, obs=obs)
 
     # placement
     psh = shr.spec_to_sharding(bundle.param_spec, mesh)
@@ -104,32 +123,46 @@ def main():
     os.makedirs(args.ckpt_dir, exist_ok=True)
     batch_fn = jax.jit(lambda s: global_batch_at(data_cfg, cfg, shape, n_mb,
                                                  s))
-    t_start = time.time()
-    for step in range(start_step, args.steps):
-        t0 = time.time()
-        batch = batch_fn(step)
-        params, opt_state, metrics = bundle.fn(params, opt_state, batch)
-        if args.max_step_seconds and time.time() - t0 > args.max_step_seconds:
-            raise TimeoutError(
-                f"step {step} exceeded watchdog "
-                f"({time.time() - t0:.1f}s > {args.max_step_seconds}s)")
-        with open(hb_path, "w") as f:
-            f.write(str(step))
-        if step % args.log_every == 0 or step == args.steps - 1:
-            m = jax.device_get(metrics)
-            print(f"step {step:6d} loss {float(m['loss']):.4f} "
-                  f"gnorm {float(m['grad_norm']):.3f} "
-                  f"lr {float(m['lr']):.2e} "
-                  f"({time.time() - t0:.2f}s/step)", flush=True)
-        if args.ckpt_every and (step + 1) % args.ckpt_every == 0:
-            ckpt.save_async(step + 1, {"params": params, "opt": opt_state},
-                            meta={"arch": cfg.name})
+    t_start = time.perf_counter()
+    engine_ctx = obs.attach_engine() if obs else contextlib.nullcontext()
+    with engine_ctx:
+        for step in range(start_step, args.steps):
+            t0 = time.perf_counter()
+            batch = batch_fn(step)
+            params, opt_state, metrics = bundle.fn(params, opt_state, batch)
+            t_step = time.perf_counter() - t0
+            if args.max_step_seconds and t_step > args.max_step_seconds:
+                raise TimeoutError(
+                    f"step {step} exceeded watchdog "
+                    f"({t_step:.1f}s > {args.max_step_seconds}s)")
+            with open(hb_path, "w") as f:
+                f.write(str(step))
+            if step % args.log_every == 0 or step == args.steps - 1:
+                m = jax.device_get(metrics)
+                print(f"step {step:6d} loss {float(m['loss']):.4f} "
+                      f"gnorm {float(m['grad_norm']):.3f} "
+                      f"lr {float(m['lr']):.2e} "
+                      f"({time.perf_counter() - t0:.2f}s/step)", flush=True)
+            if args.ckpt_every and (step + 1) % args.ckpt_every == 0:
+                ckpt.save_async(step + 1,
+                                {"params": params, "opt": opt_state},
+                                meta={"arch": cfg.name})
     ckpt.save_async(args.steps, {"params": params, "opt": opt_state},
                     meta={"arch": cfg.name, "final": True})
     ckpt.close()
-    print(f"trained {args.steps - start_step} steps in "
-          f"{time.time() - t_start:.1f}s; final loss "
+    t_total = time.perf_counter() - t_start
+    n_steps = args.steps - start_step
+    print(f"trained {n_steps} steps in {t_total:.1f}s; final loss "
           f"{float(jax.device_get(metrics)['loss']):.4f}")
+    if obs is not None:
+        from ..obs import set_active
+        obs.gauge("train.steps_per_s").set(n_steps / max(t_total, 1e-9))
+        obs.counter("train.steps").inc(n_steps)
+        jsonl, chrome = obs.save(args.obs_dir, stem=args.obs)
+        print(f"obs: {jsonl}")
+        print(f"obs: {chrome}  (load in ui.perfetto.dev)")
+        print(f"obs summary: {obs.summary()}")
+        set_active(None)
 
 
 if __name__ == "__main__":

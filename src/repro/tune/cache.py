@@ -53,6 +53,16 @@ def default_cache_dir() -> str:
 
 @dataclasses.dataclass
 class CacheStats:
+    """Lookup accounting with a counted-exactly-once contract.
+
+    Every *logical* lookup — one :meth:`PlanCache.get` or
+    :meth:`PlanCache.lookup` call — lands in exactly one bucket, however it
+    resolves internally: an exact-key probe that falls through to the
+    near-match scan and then misses is ONE miss, never an exact-miss plus a
+    near-miss (``tests/test_tune.py`` pins this).  ``peek``/``nearest`` are
+    the side-effect-free internals and never count.
+    """
+
     hits: int = 0        # exact fingerprint-key hits
     near_hits: int = 0   # near-match (fingerprint-distance) hits
     misses: int = 0
@@ -65,6 +75,11 @@ class CacheStats:
     def hit_rate(self) -> float:
         n = self.lookups
         return (self.hits + self.near_hits) / n if n else 0.0
+
+    def reset(self) -> None:
+        """Zero all buckets (start of a measurement window — e.g. an obs
+        capture that wants per-run rather than per-process rates)."""
+        self.hits = self.near_hits = self.misses = 0
 
     def __str__(self) -> str:
         return (f"hits={self.hits} near={self.near_hits} "
@@ -123,13 +138,9 @@ class PlanCache:
     # -- API ----------------------------------------------------------------
 
     def get(self, key: str) -> Optional[Dict[str, Any]]:
-        """Exact-key lookup (counts one hit or miss)."""
-        rec = self.peek(key)
-        if rec is not None:
-            self.stats.hits += 1
-        else:
-            self.stats.misses += 1
-        return rec
+        """Exact-key lookup (counts one hit or miss — routed through the
+        same single accounting point as :meth:`lookup`)."""
+        return self.lookup(key)
 
     def peek(self, key: str) -> Optional[Dict[str, Any]]:
         """Exact-key lookup with no stats side effects."""
@@ -159,15 +170,21 @@ class PlanCache:
                 best, best_d = rec, d
         return best
 
-    def lookup(self, key: str, *, features, dtype: str, n_cols: int,
-               backend: str, max_distance: float = 0.0
-               ) -> Optional[Dict[str, Any]]:
-        """Exact then near lookup, with unified hit/near/miss accounting."""
+    def lookup(self, key: str, *, features=None, dtype: str = "",
+               n_cols: int = 0, backend: str = "",
+               max_distance: float = 0.0) -> Optional[Dict[str, Any]]:
+        """Exact then near lookup — the ONE accounting point.
+
+        One call counts exactly one of {hit, near_hit, miss}, regardless of
+        how many internal probes the exact→near fall-through performs.  The
+        context arguments (``features``/``dtype``/``n_cols``/``backend``)
+        are only consulted when ``max_distance > 0`` enables the near scan.
+        """
         rec = self.peek(key)
         if rec is not None:
             self.stats.hits += 1
             return rec
-        if max_distance > 0.0:
+        if max_distance > 0.0 and features is not None:
             rec = self.nearest(features, dtype=dtype, n_cols=n_cols,
                                backend=backend, max_distance=max_distance)
             if rec is not None:

@@ -78,3 +78,65 @@ def test_trace_schema_rejects_unstamped_record():
     rec = {"kind": "step", "source": "x", "part": "step", "op": "decode",
            "step": 0, "wall_us": 1.0}   # no schema stamp
     assert validate([rec], TRACE_REF, SCHEMA)
+
+
+OBS_REF = {"$ref": "#/definitions/obs_file"}
+
+
+def test_live_obs_records_validate(rng, tmp_path):
+    """A real Obs capture — spans, every instrument kind, engine counters —
+    must validate line-for-line against the obs_file golden schema."""
+    import jax.numpy as jnp
+
+    from repro.core import loops_spmm
+    from repro.obs import Obs, load_obs
+
+    a = ((rng.random((48, 32)) < 0.1)
+         * rng.standard_normal((48, 32))).astype(np.float32)
+    fmt, _ = plan_and_convert(csr_from_dense(a), total_workers=4)
+    obs = Obs(source="schema-test")
+    with obs.attach_engine():
+        with obs.span("outer"):
+            with obs.span("inner", k=1):
+                loops_spmm(fmt, jnp.ones((32, 8), jnp.float32),
+                           backend="jnp")
+    obs.histogram("serve.decode_token_us").observe(42.0)
+    obs.gauge("serve.tokens_per_s").set(3.5)
+    jsonl, _ = obs.save(tmp_path, stem="schema-test")
+    recs = load_obs(jsonl)
+    assert {r["kind"] for r in recs} == {"meta", "span", "counter", "gauge",
+                                         "hist"}
+    assert validate(recs, OBS_REF, SCHEMA) == []
+
+
+def test_obs_schema_rejects_malformed_records():
+    # missing the labels object
+    bad = {"schema": 1, "kind": "counter", "source": "x",
+           "metric": "engine.dispatch", "value": 1.0}
+    assert validate([bad], OBS_REF, SCHEMA)
+    # negative counter value
+    bad2 = {"schema": 1, "kind": "counter", "source": "x",
+            "metric": "c", "labels": {}, "value": -1.0}
+    assert validate([bad2], OBS_REF, SCHEMA)
+    # hist bucket counts must be integers
+    bad3 = {"schema": 1, "kind": "hist", "source": "x", "metric": "h",
+            "labels": {}, "count": 1, "sum": 1.0, "mean": 1.0, "min": 1.0,
+            "max": 1.0, "p50": 1.0, "p90": 1.0, "p99": 1.0,
+            "buckets": [1.0], "counts": [0.5, 0.5]}
+    assert validate([bad3], OBS_REF, SCHEMA)
+
+
+def test_autotune_cache_record_validates():
+    rec = {"suite": "autotune", "matrix": "cache", "hits": 7,
+           "near_hits": 1, "misses": 6, "hit_rate": 0.57, "stored": 7,
+           "tuned_vs_model_geomean": 1.42}
+    assert validate([rec], BENCH_REF, SCHEMA) == []
+    assert validate([{**rec, "hits": -1}], BENCH_REF, SCHEMA)
+
+
+def test_trace_dispatch_accepts_optional_steps():
+    rec = {"schema": 1, "kind": "dispatch", "source": "x", "part": "csr",
+           "op": "spmm", "backend": "jnp", "impl": "ref", "units": 10,
+           "batch": 1, "n": 8, "steps": 10}
+    assert validate([rec], TRACE_REF, SCHEMA) == []
+    assert validate([{**rec, "steps": -1}], TRACE_REF, SCHEMA)

@@ -26,3 +26,17 @@ def test_docs_cover_the_training_surface():
     for needle in ("loops_spmm", "loops_sdd", "CACHE_VERSION", "panel_g",
                    "grad?"):
         assert needle in api, f"docs/api.md lost '{needle}'"
+
+
+def test_docs_cover_the_observability_surface():
+    """observability.md and architecture.md §8 mention the load-bearing
+    obs entry points and the jit-safety contract."""
+    obs_doc = (ROOT / "docs" / "observability.md").read_text()
+    arch = (ROOT / "docs" / "architecture.md").read_text()
+    for needle in ("observe_in_jit", "attach_engine", "watch_cache",
+                   "obs_report.py", "OBS_SCHEMA_VERSION", "Span.fence",
+                   "spans_dropped_traced"):
+        assert needle in obs_doc, f"docs/observability.md lost '{needle}'"
+    assert "## 8. Runtime observability" in arch
+    for needle in ("observe_in_jit", "tune.cache.", "obs_file"):
+        assert needle in arch, f"architecture.md §8 lost '{needle}'"

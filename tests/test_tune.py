@@ -454,3 +454,46 @@ def test_search_measures_batched_operand(tmp_path):
     with pytest.raises(ValueError, match="rhs_shape"):
         search(csr, b=jnp.zeros((32, 8)), rhs_shape=(3, 32, 8),
                measure=fake_measure)
+
+
+def test_cache_stats_counted_exactly_once(tmp_path):
+    """One logical lookup lands in exactly one bucket — an exact-probe
+    fall-through to the near scan that then misses is ONE miss, never an
+    exact-miss plus a near-miss (the counted-exactly-once contract the
+    obs ``tune.cache.*`` gauges rely on)."""
+    cache = PlanCache(str(tmp_path))
+    a = _dense(21, 96, 64, 0.2)
+    csr = csr_from_dense(a)
+    fp = fingerprint(csr)
+    key = cache_key(fp, n_cols=32, dtype="float32", backend="jnp")
+    # miss with the near scan enabled: exact probe + near scan = 1 miss
+    cache.lookup(key, features=fp.features, dtype="float32",
+                 n_cols=32, backend="jnp", max_distance=0.25)
+    assert (cache.stats.hits, cache.stats.near_hits,
+            cache.stats.misses) == (0, 0, 1)
+    assert cache.stats.lookups == 1
+    # get() routes through the same single accounting point
+    cache.put("k", {"plan": 1})
+    assert cache.get("k") is not None
+    assert (cache.stats.hits, cache.stats.misses) == (1, 1)
+    assert cache.stats.lookups == 2
+    # peek/nearest are side-effect-free internals
+    cache.peek("k")
+    cache.peek("absent")
+    cache.nearest(fp.features, dtype="float32", n_cols=32, backend="jnp",
+                  max_distance=0.25)
+    assert cache.stats.lookups == 2
+
+
+def test_cache_stats_reset(tmp_path):
+    cache = PlanCache(str(tmp_path))
+    cache.put("k", {"plan": 1})
+    cache.lookup("k")
+    cache.lookup("absent")
+    assert cache.stats.lookups == 2 and cache.stats.hit_rate == 0.5
+    cache.stats.reset()
+    assert (cache.stats.hits, cache.stats.near_hits,
+            cache.stats.misses) == (0, 0, 0)
+    assert cache.stats.lookups == 0 and cache.stats.hit_rate == 0.0
+    cache.lookup("k")                      # a fresh measurement window
+    assert cache.stats.hits == 1 and cache.stats.lookups == 1
