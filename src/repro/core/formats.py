@@ -359,11 +359,25 @@ def csr_from_dense(dense: np.ndarray) -> CSR:
     return _csr_from_arrays(row_ptr, cols, dense[rows, cols], dense.shape)
 
 
-def csr_from_coo(rows, cols, vals, shape) -> CSR:
+def csr_from_coo(rows, cols, vals, shape, *,
+                 validate: str | None = "strict") -> CSR:
     """COO -> CSR, coalescing duplicates: values sharing a ``(row, col)``
     coordinate are *summed* (random generators like ``suite.uniform`` emit
     colliding coordinates; un-coalesced duplicates inflate nnz and every
-    statistic derived from it)."""
+    statistic derived from it).
+
+    Coordinates are validated first (``repro.resilience.validate``): a
+    negative or out-of-range coordinate used to corrupt the linearised
+    dedup silently — under ``validate="strict"`` (default) it now raises a
+    classified ``SparseInputError``; ``"drop"``/``"clip"`` repair instead
+    (drop the entry, or clip it into range), recording ``validate.repaired``
+    counters; ``None`` skips the gate (trusted internal callers only).
+    """
+    if validate is not None:
+        from ..resilience.validate import validate_coo
+        rows, cols, vals, _ = validate_coo(
+            rows, cols, vals, shape,
+            repair=None if validate == "strict" else validate)
     rows = np.asarray(rows, np.int64)
     cols = np.asarray(cols, np.int64)
     vals = np.asarray(vals)

@@ -36,6 +36,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..kernels import engine, ref
+from ..resilience import fallback as _resilience
 from . import partition
 from .formats import (CSR, DEFAULT_PANEL_G, HALF_PACKED_ROWS, LoopsFormat,
                       SUBLANE_ROWS, loops_from_csr)
@@ -74,7 +75,8 @@ def plan_and_convert(csr: CSR, *, total_workers: int = 8,
                      tp_vpu: float = 1.0, tp_mxu: float = 4.0,
                      br: int | None = None, panel_g: int | None = None,
                      paper_literal: bool = False,
-                     tuner=None) -> tuple[LoopsFormat, SpmmPlan]:
+                     tuner=None, validate: str | None = "strict"
+                     ) -> tuple[LoopsFormat, SpmmPlan]:
     """Pick (t_vpu, t_mxu) via the perf model, solve Eq. 1, run Algorithm 1.
 
     ``tp_vpu``/``tp_mxu`` are per-worker row throughputs; defaults reflect the
@@ -86,7 +88,18 @@ def plan_and_convert(csr: CSR, *, total_workers: int = 8,
     ``.tune(csr) -> (fmt, plan)``) — replaces the model-only path entirely:
     the plan comes from the measured, fingerprint-keyed cache, so repeated
     call sites (FFN layers, GCN epochs, serving) never re-derive it.
+
+    ``validate`` gates ingestion validation of ``csr``
+    (:mod:`repro.resilience.validate`): ``"strict"`` (default) raises a
+    classified :class:`repro.resilience.SparseInputError` on a malformed
+    input before Algorithm 1 can index with it; ``"drop"``/``"clip"`` repair
+    instead (recording ``validate.repaired`` counters); ``None`` trusts the
+    caller (hot inner loops that already validated).
     """
+    if validate is not None:
+        from ..resilience.validate import validate_csr
+        csr, _ = validate_csr(
+            csr, repair=None if validate == "strict" else validate)
     if tuner is not None:
         return tuner.tune(csr)
     br = br or default_br(csr.vals.dtype)
@@ -118,9 +131,20 @@ def _loops_execute(fmt: LoopsFormat, b: jax.Array, backend: str, bn,
     pallas = backend != "jnp"   # panel views only materialise for Pallas
     if (has_csr and has_bcsr and pallas
             and fmt.r_boundary % fmt.bcsr_part.br == 0):
-        return engine.loops_spmm_fused(fmt, b, backend=backend, bn=bn,
-                                       out_dtype=out_dtype, csr_vals=csr_vals,
-                                       bcsr_vals=bcsr_vals)
+        try:
+            return engine.loops_spmm_fused(
+                fmt, b, backend=backend, bn=bn, out_dtype=out_dtype,
+                csr_vals=csr_vals, bcsr_vals=bcsr_vals)
+        except Exception as e:   # noqa: BLE001 - the parts path IS the handler
+            # The fused chain (pallas → interpret) is exhausted: degrade to
+            # the two-pass parts path below, whose per-part chains reach the
+            # jnp oracle.  Respect the kill switch — with fallback disabled
+            # the failure must propagate for tests/operators to see.
+            if not _resilience.get_policy().enabled:
+                raise
+            _resilience.note_degraded("engine.fallback", part="fused",
+                                      op="spmm",
+                                      reason=_resilience.classify(e))
     parts = []
     if has_csr:
         parts.append(engine.csr_spmm(

@@ -80,9 +80,24 @@ def compressed_psum(x: jax.Array, axis_name: str,
                  "int8": n + 4 * n // D}[precision], precision)
     if precision == "none" or D == 1:
         return jax.lax.psum(x, axis_name)
-    if precision == "bf16":
-        return jax.lax.psum(x.astype(jnp.bfloat16), axis_name).astype(x.dtype)
-    return _int8_psum(x, axis_name, D)
+    # Resilience (docs/robustness.md): a failing compressed path degrades to
+    # the plain fp32 psum — numerically a strict upgrade, just more bytes —
+    # with a ``dist.fallback`` counter.  ``dist.psum.{precision}`` is the
+    # chaos injection site; this fires at trace time like the byte gauge.
+    from ..resilience.fallback import classify, get_policy
+    from ..resilience.inject import fault_point, note_degraded
+    try:
+        fault_point(f"dist.psum.{precision}")
+        if precision == "bf16":
+            return jax.lax.psum(x.astype(jnp.bfloat16),
+                                axis_name).astype(x.dtype)
+        return _int8_psum(x, axis_name, D)
+    except Exception as e:    # noqa: BLE001 - plain psum IS the handler
+        if not get_policy().enabled:
+            raise
+        note_degraded("dist.fallback", precision=precision,
+                      reason=classify(e))
+        return jax.lax.psum(x, axis_name)
 
 
 def _note_bytes(nbytes: int, precision: str) -> None:

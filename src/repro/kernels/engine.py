@@ -44,6 +44,8 @@ from typing import Callable, Dict, Tuple
 import jax
 import jax.numpy as jnp
 
+from ..resilience import fallback as _fallback
+
 __all__ = [
     "acc_dtype_for", "resolve_dtypes", "default_backend", "resolve_backend",
     "check_rhs", "flatten_batch", "unflatten_batch", "batch_block",
@@ -299,33 +301,39 @@ def csr_spmm(csr, b: jax.Array, *, backend: str | None = None,
     if _empty_batch(b):
         _, out = resolve_dtypes(v.dtype, out_dtype)
         return jnp.zeros(b.shape[:-2] + (csr.nrows, b.shape[-1]), out)
-    if backend == "jnp":
-        _note("csr", "spmm", backend=backend, impl="ref", units=csr.nnz,
-              batch=1, n=int(b.shape[-1]))
-        return get_kernel("csr", "spmm", "ref")(
-            jnp.asarray(csr.row_ids), jnp.asarray(csr.col_idx), v, b,
-            csr.nrows, out_dtype=out_dtype)
-    interpret = backend == "interpret"
-    b3, batch = flatten_batch(b)
-    b3p = _pad_flat_batch(b3)
-    _note("csr", "spmm", backend=backend,
-          impl="panels" if panels is not None else "flat",
-          units=int(panels.npanels) if panels is not None else int(csr.nnz),
-          batch=int(b3p.shape[0]) if b3p.ndim == 3 else 1,
-          n=int(b.shape[-1]))
-    if panels is not None:
-        out = get_kernel("csr", "spmm", "panels")(
-            jnp.asarray(panels.panel_rows), jnp.asarray(panels.panel_cols),
-            panel_values(panels, vals), jnp.asarray(panels.panel_mask),
-            b3p, nrows=csr.nrows, bn=bn, out_dtype=out_dtype,
-            interpret=interpret)
-    else:
-        out = get_kernel("csr", "spmm", "flat")(
-            jnp.asarray(csr.row_ids), jnp.asarray(csr.col_idx), v, b3p,
-            nrows=csr.nrows, bn=bn, out_dtype=out_dtype, interpret=interpret)
-    if b3p is not b3:
-        out = out[:b3.shape[0]]
-    return unflatten_batch(out, batch)
+
+    def attempt(bk: str) -> jax.Array:
+        if bk == "jnp":
+            _note("csr", "spmm", backend=bk, impl="ref", units=csr.nnz,
+                  batch=1, n=int(b.shape[-1]))
+            return get_kernel("csr", "spmm", "ref")(
+                jnp.asarray(csr.row_ids), jnp.asarray(csr.col_idx), v, b,
+                csr.nrows, out_dtype=out_dtype)
+        interpret = bk == "interpret"
+        b3, batch = flatten_batch(b)
+        b3p = _pad_flat_batch(b3)
+        _note("csr", "spmm", backend=bk,
+              impl="panels" if panels is not None else "flat",
+              units=int(panels.npanels) if panels is not None
+              else int(csr.nnz),
+              batch=int(b3p.shape[0]) if b3p.ndim == 3 else 1,
+              n=int(b.shape[-1]))
+        if panels is not None:
+            out = get_kernel("csr", "spmm", "panels")(
+                jnp.asarray(panels.panel_rows), jnp.asarray(panels.panel_cols),
+                panel_values(panels, vals), jnp.asarray(panels.panel_mask),
+                b3p, nrows=csr.nrows, bn=bn, out_dtype=out_dtype,
+                interpret=interpret)
+        else:
+            out = get_kernel("csr", "spmm", "flat")(
+                jnp.asarray(csr.row_ids), jnp.asarray(csr.col_idx), v, b3p,
+                nrows=csr.nrows, bn=bn, out_dtype=out_dtype,
+                interpret=interpret)
+        if b3p is not b3:
+            out = out[:b3.shape[0]]
+        return unflatten_batch(out, batch)
+
+    return _fallback.run_chain("csr", "spmm", backend, attempt)
 
 
 def bcsr_spmm(bcsr, b: jax.Array, *, backend: str | None = None,
@@ -344,36 +352,40 @@ def bcsr_spmm(bcsr, b: jax.Array, *, backend: str | None = None,
     if _empty_batch(b):
         _, out = resolve_dtypes(v.dtype, out_dtype)
         return jnp.zeros(b.shape[:-2] + (bcsr.nrows, b.shape[-1]), out)
-    if backend == "jnp":
-        _note("bcsr", "spmm", backend=backend, impl="ref",
-              units=int(bcsr.ntiles), batch=1, n=int(b.shape[-1]))
-        padded = get_kernel("bcsr", "spmm", "ref")(
-            jnp.asarray(bcsr.tile_rows), jnp.asarray(bcsr.tile_cols), v, b,
-            bcsr.nblocks, out_dtype=out_dtype)
-        return padded[..., :bcsr.nrows, :]
-    interpret = backend == "interpret"
-    b3, batch = flatten_batch(b)
-    b3p = _pad_flat_batch(b3)
-    _note("bcsr", "spmm", backend=backend,
-          impl="panels" if panels is not None else "flat",
-          units=int(panels.npanels) if panels is not None
-          else int(bcsr.ntiles),
-          batch=int(b3p.shape[0]) if b3p.ndim == 3 else 1,
-          n=int(b.shape[-1]))
-    if panels is not None:
-        padded = get_kernel("bcsr", "spmm", "panels")(
-            jnp.asarray(panels.panel_rows), jnp.asarray(panels.panel_cols),
-            panel_values(panels, vals), jnp.asarray(panels.panel_mask),
-            b3p, nblocks=panels.nblocks, bn=bn, out_dtype=out_dtype,
-            interpret=interpret)
-    else:
-        padded = get_kernel("bcsr", "spmm", "flat")(
-            jnp.asarray(bcsr.tile_rows), jnp.asarray(bcsr.tile_cols), v, b3p,
-            nblocks=bcsr.nblocks, bn=bn, out_dtype=out_dtype,
-            interpret=interpret)
-    if b3p is not b3:
-        padded = padded[:b3.shape[0]]
-    return unflatten_batch(padded[..., :bcsr.nrows, :], batch)
+
+    def attempt(bk: str) -> jax.Array:
+        if bk == "jnp":
+            _note("bcsr", "spmm", backend=bk, impl="ref",
+                  units=int(bcsr.ntiles), batch=1, n=int(b.shape[-1]))
+            padded = get_kernel("bcsr", "spmm", "ref")(
+                jnp.asarray(bcsr.tile_rows), jnp.asarray(bcsr.tile_cols), v,
+                b, bcsr.nblocks, out_dtype=out_dtype)
+            return padded[..., :bcsr.nrows, :]
+        interpret = bk == "interpret"
+        b3, batch = flatten_batch(b)
+        b3p = _pad_flat_batch(b3)
+        _note("bcsr", "spmm", backend=bk,
+              impl="panels" if panels is not None else "flat",
+              units=int(panels.npanels) if panels is not None
+              else int(bcsr.ntiles),
+              batch=int(b3p.shape[0]) if b3p.ndim == 3 else 1,
+              n=int(b.shape[-1]))
+        if panels is not None:
+            padded = get_kernel("bcsr", "spmm", "panels")(
+                jnp.asarray(panels.panel_rows), jnp.asarray(panels.panel_cols),
+                panel_values(panels, vals), jnp.asarray(panels.panel_mask),
+                b3p, nblocks=panels.nblocks, bn=bn, out_dtype=out_dtype,
+                interpret=interpret)
+        else:
+            padded = get_kernel("bcsr", "spmm", "flat")(
+                jnp.asarray(bcsr.tile_rows), jnp.asarray(bcsr.tile_cols), v,
+                b3p, nblocks=bcsr.nblocks, bn=bn, out_dtype=out_dtype,
+                interpret=interpret)
+        if b3p is not b3:
+            padded = padded[:b3.shape[0]]
+        return unflatten_batch(padded[..., :bcsr.nrows, :], batch)
+
+    return _fallback.run_chain("bcsr", "spmm", backend, attempt)
 
 
 def loops_spmm_fused(fmt, b: jax.Array, *, backend: str | None = None,
@@ -408,30 +420,38 @@ def loops_spmm_fused(fmt, b: jax.Array, *, backend: str | None = None,
     if _empty_batch(b):
         _, out = resolve_dtypes(fmt.csr_part.vals.dtype, out_dtype)
         return jnp.zeros(b.shape[:-2] + (fmt.nrows, b.shape[-1]), out)
-    interpret = backend == "interpret"
-    b3, batch = flatten_batch(b)
-    b3p = _pad_flat_batch(b3)
-    nb = int(b3p.shape[0]) if b3p.ndim == 3 else 1
-    _note("csr", "spmm", backend=backend, impl="panels", fused=True,
-          units=int(cp.npanels), batch=nb, n=int(b.shape[-1]))
-    _note("bcsr", "spmm", backend=backend, impl="panels", fused=True,
-          units=int(bp.npanels), batch=nb, n=int(b.shape[-1]))
-    r_pad = r_b + bp.nblocks * br
-    out = get_kernel("csr", "spmm", "panels")(
-        jnp.asarray(cp.panel_rows), jnp.asarray(cp.panel_cols),
-        panel_values(cp, csr_vals), jnp.asarray(cp.panel_mask),
-        b3p, nrows=r_b, out_rows=r_pad, bn=bn, out_dtype=out_dtype,
-        interpret=interpret)
-    out = get_kernel("bcsr", "spmm", "panels")(
-        jnp.asarray(bp.panel_rows), jnp.asarray(bp.panel_cols),
-        panel_values(bp, bcsr_vals), jnp.asarray(bp.panel_mask),
-        b3p, nblocks=bp.nblocks, row_block_offset=r_b // br, out_rows=r_pad,
-        bn=bn, out_dtype=out_dtype, interpret=interpret, carry=out)
-    if b3p is not b3:
-        out = out[:b3.shape[0]]
-    if r_pad != fmt.nrows:
-        out = out[..., :fmt.nrows, :]
-    return unflatten_batch(out, batch)
+
+    def attempt(bk: str) -> jax.Array:
+        interpret = bk == "interpret"
+        b3, batch = flatten_batch(b)
+        b3p = _pad_flat_batch(b3)
+        nb = int(b3p.shape[0]) if b3p.ndim == 3 else 1
+        _note("csr", "spmm", backend=bk, impl="panels", fused=True,
+              units=int(cp.npanels), batch=nb, n=int(b.shape[-1]))
+        _note("bcsr", "spmm", backend=bk, impl="panels", fused=True,
+              units=int(bp.npanels), batch=nb, n=int(b.shape[-1]))
+        r_pad = r_b + bp.nblocks * br
+        out = get_kernel("csr", "spmm", "panels")(
+            jnp.asarray(cp.panel_rows), jnp.asarray(cp.panel_cols),
+            panel_values(cp, csr_vals), jnp.asarray(cp.panel_mask),
+            b3p, nrows=r_b, out_rows=r_pad, bn=bn, out_dtype=out_dtype,
+            interpret=interpret)
+        out = get_kernel("bcsr", "spmm", "panels")(
+            jnp.asarray(bp.panel_rows), jnp.asarray(bp.panel_cols),
+            panel_values(bp, bcsr_vals), jnp.asarray(bp.panel_mask),
+            b3p, nblocks=bp.nblocks, row_block_offset=r_b // br,
+            out_rows=r_pad, bn=bn, out_dtype=out_dtype, interpret=interpret,
+            carry=out)
+        if b3p is not b3:
+            out = out[:b3.shape[0]]
+        if r_pad != fmt.nrows:
+            out = out[..., :fmt.nrows, :]
+        return unflatten_batch(out, batch)
+
+    # The fused chain ends at interpret (no jnp single-pass exists);
+    # core.spmm._loops_execute catches an exhausted chain and degrades to
+    # the two-pass parts path, whose per-part chains reach the oracle.
+    return _fallback.run_chain("fused", "spmm", backend, attempt)
 
 
 def loops_sdd(fmt, dy: jax.Array, b: jax.Array, *,
@@ -465,20 +485,26 @@ def loops_sdd(fmt, dy: jax.Array, b: jax.Array, *,
     if backend == "jnp" or _empty_batch(b):
         return _loops_sdd_impl(fmt, dy, b, backend, bn)
 
-    @jax.custom_batching.custom_vmap
-    def call(dy_, b_):
-        return _loops_sdd_impl(fmt, dy_, b_, backend, bn)
+    def attempt(bk: str):
+        if bk == "jnp":
+            return _loops_sdd_impl(fmt, dy, b, bk, bn)
 
-    @call.def_vmap
-    def _vmap_rule(axis_size, in_batched, dy_, b_):
-        dy_b, b_b = in_batched
-        outs = [loops_sdd(fmt, dy_[i] if dy_b else dy_,
-                          b_[i] if b_b else b_, backend=backend, bn=bn)
-                for i in range(axis_size)]
-        return (jnp.stack([o[0] for o in outs]),
-                jnp.stack([o[1] for o in outs])), (True, True)
+        @jax.custom_batching.custom_vmap
+        def call(dy_, b_):
+            return _loops_sdd_impl(fmt, dy_, b_, bk, bn)
 
-    return call(dy, b)
+        @call.def_vmap
+        def _vmap_rule(axis_size, in_batched, dy_, b_):
+            dy_b, b_b = in_batched
+            outs = [loops_sdd(fmt, dy_[i] if dy_b else dy_,
+                              b_[i] if b_b else b_, backend=bk, bn=bn)
+                    for i in range(axis_size)]
+            return (jnp.stack([o[0] for o in outs]),
+                    jnp.stack([o[1] for o in outs])), (True, True)
+
+        return call(dy, b)
+
+    return _fallback.run_chain("loops", "sdd", backend, attempt)
 
 
 def _loops_sdd_impl(fmt, dy, b, backend, bn):

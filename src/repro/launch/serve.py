@@ -35,6 +35,8 @@ import numpy as np
 from ..configs import REDUCED, get_config
 from ..dist import step as step_lib
 from ..models import api, frontends
+from ..resilience.fallback import retry_with_backoff
+from ..resilience.inject import fault_point, install_from_env, note_degraded
 from .mesh import make_test_mesh
 
 
@@ -56,7 +58,7 @@ def pad_cache(cfg, cache, max_len: int):
 
 
 def warm_spmm_plan_cache(cfg, params, obs, *, sparsity: float = 0.9,
-                         n_cols: int = 8):
+                         n_cols: int = 8, on_miss: str = "search"):
     """Warm the LOOPS plan cache for this model's FFN weight shapes.
 
     The "warm plan-cache pool" prerequisite of continuous batching
@@ -69,10 +71,19 @@ def warm_spmm_plan_cache(cfg, params, obs, *, sparsity: float = 0.9,
     ``engine.dispatch`` counters.  Families without a stacked dense FFN
     (MoE/SSM variants) warm a synthetic ``(4*d_model, d_model)`` matrix of
     the same sparsity instead.
+
+    Resilience (docs/robustness.md): the weight passes an
+    ``ingest.serve.weights`` fault point and the pruned CSR is validated
+    with ``repair="drop"`` — corrupt values are repaired (and counted)
+    rather than fed to Algorithm 1.  ``on_miss="model"`` switches the
+    cache-miss policy to degraded mode: serve the Eq. 2 model-prior plan
+    immediately (no measurement sweep on the request path), counting each
+    such miss as ``serve.degraded{reason="plan-cache-miss"}``.
     """
     from ..core.formats import csr_from_dense
     from ..core.spmm import loops_spmm
     from ..models.sparse_ffn import magnitude_prune
+    from ..resilience.validate import validate_csr
     from ..tune import PlanCache, SearchBudget, autotune
 
     cache = PlanCache()
@@ -92,9 +103,15 @@ def warm_spmm_plan_cache(cfg, params, obs, *, sparsity: float = 0.9,
 
     for i, w in enumerate(weights):
         with obs.span("serve.warm_plan", cat="warm", layer=i):
+            w = np.asarray(fault_point("ingest.serve.weights", w))
             csr = csr_from_dense(magnitude_prune(w, sparsity))
+            csr, _ = validate_csr(csr, repair="drop")
+            misses0 = cache.stats.misses
             fmt, _plan = autotune(csr, n_cols=n_cols, cache=cache,
-                                  budget=budget, backend="jnp")
+                                  budget=budget, backend="jnp",
+                                  on_miss=on_miss)
+            if on_miss == "model" and cache.stats.misses > misses0:
+                note_degraded("serve.degraded", reason="plan-cache-miss")
             x = jnp.ones((csr.ncols, n_cols), jnp.float32)
             jax.block_until_ready(loops_spmm(fmt, x))
     obs.gauge("serve.warm_layers").set(len(weights))
@@ -121,7 +138,24 @@ def main():
                     help="override the obs output directory")
     ap.add_argument("--no-warm-spmm-cache", action="store_true",
                     help="skip the LOOPS plan-cache warm-up under --obs")
+    ap.add_argument("--plan-on-miss", choices=("search", "model"),
+                    default="search",
+                    help="plan-cache miss policy for the warm-up: 'search' "
+                         "pays the measurement sweep (default); 'model' "
+                         "serves the Eq. 2 model-prior plan immediately "
+                         "(degraded mode, counted as serve.degraded)")
+    ap.add_argument("--step-retries", type=int, default=2,
+                    help="host-level retries per prefill/decode step")
+    ap.add_argument("--retry-backoff-ms", type=float, default=10.0,
+                    help="initial retry backoff (doubles per attempt)")
+    ap.add_argument("--step-deadline-ms", type=float, default=None,
+                    help="per-request deadline across retries; exceeding it "
+                         "raises DeadlineExceeded instead of sleeping past")
     args = ap.parse_args()
+
+    # Chaos harness: honour REPRO_FAULT_PLAN so CI can inject failures into
+    # a stock serving run (docs/robustness.md).
+    install_from_env()
 
     obs = None
     if args.obs:
@@ -147,15 +181,34 @@ def main():
     bav = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
                        batch)
 
+    # Degraded-mode step execution: transient host-level failures retry
+    # with exponential backoff under the optional per-request deadline;
+    # every retry is a counted degradation, never a silent one.
+    retry_kw = dict(
+        retries=args.step_retries,
+        backoff_s=args.retry_backoff_ms / 1e3,
+        deadline_s=(args.step_deadline_ms / 1e3
+                    if args.step_deadline_ms is not None else None),
+        on_retry=lambda n, e: (
+            note_degraded("serve.degraded", reason="retry"),
+            note_degraded("serve.retries")),
+    )
+
     engine_ctx = obs.attach_engine() if obs else contextlib.nullcontext()
     with engine_ctx:
         if obs is not None and not args.no_warm_spmm_cache:
-            warm_spmm_plan_cache(cfg, params, obs)
+            warm_spmm_plan_cache(cfg, params, obs,
+                                 on_miss=args.plan_on_miss)
 
         prefill_fn, _, _ = step_lib.build_prefill(cfg, mesh, pav, bav,
                                                   obs=obs)
+
+        def run_prefill():
+            fault_point("serve.prefill")
+            return prefill_fn(params, batch)
+
         t0 = time.perf_counter()
-        cache, logits = prefill_fn(params, batch)
+        cache, logits = retry_with_backoff(run_prefill, **retry_kw)
         jax.block_until_ready(logits)
         t_pf_call = time.perf_counter() - t0
         if obs is not None:
@@ -186,10 +239,16 @@ def main():
                                   if cfg.frontend == "vision_stub" else 0)
         tok_hist = obs.histogram("serve.decode_token_us") if obs else None
         t0 = time.perf_counter()
+        def run_step(c, tk, pos):
+            # the fault point fires BEFORE serve_fn, so a retried step never
+            # reuses an already-donated cache buffer
+            fault_point("serve.step")
+            return serve_fn(params, c, tk, pos)
+
         for i in range(args.gen_len - 1):
             t_step = time.perf_counter()
-            cache, logits = serve_fn(params, cache, toks,
-                                     jnp.int32(pos0 + i))
+            cache, logits = retry_with_backoff(
+                run_step, cache, toks, jnp.int32(pos0 + i), **retry_kw)
             key, sub = jax.random.split(key)
             toks = sample(logits, sub)[:, None].astype(jnp.int32)
             jax.block_until_ready(toks)

@@ -80,6 +80,9 @@ def build_args():
 
 def main():
     args = build_args()
+    # Chaos harness: honour REPRO_FAULT_PLAN (docs/robustness.md).
+    from ..resilience.inject import install_from_env
+    install_from_env()
     obs = None
     if args.obs:
         from ..obs import Obs, set_active
@@ -114,6 +117,10 @@ def main():
     if args.resume and latest_step(args.ckpt_dir) is not None:
         tmpl = {"params": params, "opt": opt_state}
         start_step, tree, meta = restore(args.ckpt_dir, tmpl)
+        # Validated ingestion: a checkpoint that restores NaN/Inf params
+        # would train to garbage silently — fail loudly at the boundary.
+        from ..resilience.validate import check_finite_tree
+        check_finite_tree(tree["params"], what="restored params")
         params = jax.device_put(tree["params"], psh)
         opt_state = jax.device_put(tree["opt"], osh)
         print(f"[resume] step {start_step} from {args.ckpt_dir} "

@@ -168,6 +168,10 @@ class Obs:
             self.metrics.gauge("tune.cache.misses", cache=name).set(st.misses)
             self.metrics.gauge("tune.cache.hit_rate",
                                cache=name).set(st.hit_rate)
+            # distinct name from the ``tune.cache.quarantined`` *counter*
+            # (note_degraded): the registry forbids one name in two kinds
+            self.metrics.gauge("tune.cache.quarantined_files",
+                               cache=name).set(st.quarantined)
 
     # -- step seam ---------------------------------------------------------
 

@@ -1,0 +1,45 @@
+"""repro.resilience — degrade, don't crash.
+
+The LOOPS design always has a correct slower path for any matrix (the jnp
+oracle at the bottom of every chain); this package makes the system
+actually take it under faults instead of dying.  Four pillars, threaded
+through formats / engine / tune / dist / serving (docs/robustness.md):
+
+  * :mod:`~repro.resilience.validate` — validated ingestion: the
+    :class:`SparseInputError` defect taxonomy, strict and repair modes;
+  * :mod:`~repro.resilience.fallback` — engine fallback chains
+    (``pallas → interpret → jnp``), tuner trial isolation support, and the
+    host-side :func:`retry_with_backoff`;
+  * :mod:`~repro.resilience.inject` — seeded, site-addressable fault
+    injection (:class:`FaultPlan` / ``$REPRO_FAULT_PLAN``): the chaos
+    harness that proves every fallback fires;
+  * degraded-mode serving lives in :mod:`repro.launch.serve` on top of the
+    pieces above (plan-on-miss policy, per-step deadlines and retries).
+
+Every degradation is visible: ``engine.fallback``, ``serve.degraded``,
+``tune.cache.quarantined``, ``tune.search.trial_failed``, ``dist.fallback``
+and ``validate.repaired`` counters land on the active obs capture
+(:func:`note_degraded`), rendered by ``tools/obs_report.py``'s
+Degradations section and gated in CI by ``--fail-on-degraded``.
+"""
+from .fallback import (DEFAULT_CHAIN, DeadlineExceeded, FallbackPolicy,
+                       classify, disabled, get_policy, retry_with_backoff,
+                       run_chain, set_policy)
+from .inject import (FaultClause, FaultPlan, InjectedFault, InjectedTimeout,
+                     fault_point, get_plan, install_from_env, note_degraded,
+                     set_plan)
+from .validate import (DEFECT_KINDS, SparseInputError, ValidationReport,
+                       check_finite_tree, csr_defects, validate_coo,
+                       validate_csr, validate_loops)
+
+__all__ = [
+    "DEFAULT_CHAIN", "DeadlineExceeded", "FallbackPolicy", "classify",
+    "disabled", "get_policy", "retry_with_backoff", "run_chain",
+    "set_policy",
+    "FaultClause", "FaultPlan", "InjectedFault", "InjectedTimeout",
+    "fault_point", "get_plan", "install_from_env", "note_degraded",
+    "set_plan",
+    "DEFECT_KINDS", "SparseInputError", "ValidationReport",
+    "check_finite_tree", "csr_defects", "validate_coo", "validate_csr",
+    "validate_loops",
+]

@@ -102,6 +102,7 @@ def autotune(csr: CSR, *, n_cols: int = 32, rhs_shape=None,
              model: Optional[QuadraticPerfModel] = None,
              budget: SearchBudget = SearchBudget(),
              near_distance: float = 0.25,
+             on_miss: str = "search",
              ) -> Tuple[LoopsFormat, SpmmPlan]:
     """Tune-or-fetch an execution plan for ``csr`` against an (ncols, n_cols)
     dense operand; returns the converted format plus the resolved plan.
@@ -114,9 +115,20 @@ def autotune(csr: CSR, *, n_cols: int = 32, rhs_shape=None,
     engine call will actually execute.
 
     On a cache hit (exact or near) only the Algorithm 1 conversion runs —
-    no candidate is ever measured.  On a miss, :func:`repro.tune.search.search`
-    spends its budget and the winner is persisted.
+    no candidate is ever measured.  On a miss, ``on_miss`` picks the policy:
+
+      * ``"search"`` (default) — :func:`repro.tune.search.search` spends its
+        budget and the measured winner is persisted;
+      * ``"model"`` — degraded mode (docs/robustness.md): skip measurement
+        entirely and serve the Eq. 2 model-prior plan *now*
+        (:func:`repro.core.spmm.plan_and_convert`), persisting it with
+        ``gflops=0.0, trials=0`` so a later search-mode call can tell the
+        record was never measured.  This is what lets a latency-bound server
+        answer a cold request without paying a tuning sweep.
     """
+    if on_miss not in ("search", "model"):
+        raise ValueError(f"on_miss must be 'search' or 'model', "
+                         f"got {on_miss!r}")
     if cache is None:   # NB: not `cache or ...` — an empty PlanCache is falsy
         cache = default_cache()
     if rhs_shape is not None:
@@ -137,6 +149,16 @@ def autotune(csr: CSR, *, n_cols: int = 32, rhs_shape=None,
                             "fingerprint": [float(f) for f in fp.features()]})
         return loops_from_csr(csr, plan.r_boundary, plan.br,
                               panel_g=plan.panel_g), plan
+    if on_miss == "model":
+        from ..core.spmm import plan_and_convert
+        fmt, plan = plan_and_convert(csr, total_workers=total_workers,
+                                     model=model, validate=None)
+        cache.put(key, make_record(
+            fp.features(), dtype=dt, n_cols=n_cols, backend=backend,
+            r_frac=float(plan.r_boundary) / max(csr.nrows, 1),
+            t_vpu=plan.t_vpu, t_mxu=plan.t_mxu, br=plan.br,
+            panel_g=plan.panel_g, gflops=0.0, trials=0))
+        return fmt, plan
     res = search(csr, n_cols=n_cols, rhs_shape=rhs_shape,
                  total_workers=total_workers,
                  model=model, budget=budget, backend=backend)

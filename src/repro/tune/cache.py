@@ -18,6 +18,21 @@ Lookup is two-tier:
 ``stats`` counts hits / near-hits / misses — the amortisation story a
 production SpMM service lives on (a repeated ``autotune`` call must be a
 pure cache hit; tests assert this).
+
+Resilience (docs/robustness.md):
+
+  * **lock-free read-retry** — writes are atomic (tmp + rename), but a
+    reader racing a writer on filesystems without atomic rename visibility
+    can observe a partial file; a parse failure re-reads up to
+    :data:`READ_RETRIES` times (a racing write completes in well under the
+    backoff) before concluding the file is actually corrupt;
+  * **quarantine-on-corrupt** — a file that still fails to parse is moved
+    aside to ``plans.json.quarantined`` (``stats.quarantined`` counts it,
+    ``tune.cache.quarantined`` lands on the active obs capture) and the
+    cache rebuilds from empty instead of raising on every lookup;
+  * **merge-on-save** — ``put`` folds fresh on-disk entries from concurrent
+    writers into the blob before writing, so two processes tuning disjoint
+    matrices both keep their work (last writer wins per key).
 """
 from __future__ import annotations
 
@@ -25,9 +40,11 @@ import dataclasses
 import json
 import os
 import tempfile
+import time
 from collections import OrderedDict
 from typing import Any, Dict, Optional
 
+from ..resilience.inject import fault_point, note_degraded
 from .fingerprint import feature_distance
 
 __all__ = ["PlanCache", "CacheStats", "CACHE_VERSION", "default_cache_dir"]
@@ -42,6 +59,14 @@ __all__ = ["PlanCache", "CacheStats", "CACHE_VERSION", "default_cache_dir"]
 # v2 record keyed on the trailing dim alone would transfer a plan tuned for
 # an 8x narrower workload.
 CACHE_VERSION = 3
+
+# Lock-free read-retry: parse attempts before a persistently unparseable
+# file is quarantined, and the wait between them (a racing atomic write
+# completes in far less).  ``_retry_sleep`` is an indirection point so tests
+# can interleave a writer with the retries.
+READ_RETRIES = 3
+READ_RETRY_DELAY_S = 0.01
+_retry_sleep = time.sleep
 
 
 def default_cache_dir() -> str:
@@ -66,6 +91,9 @@ class CacheStats:
     hits: int = 0        # exact fingerprint-key hits
     near_hits: int = 0   # near-match (fingerprint-distance) hits
     misses: int = 0
+    quarantined: int = 0  # corrupt files moved to *.quarantined (not a
+    # lookup bucket: quarantine happens during _load, the lookup that
+    # triggered it still counts its own miss)
 
     @property
     def lookups(self) -> int:
@@ -79,11 +107,12 @@ class CacheStats:
     def reset(self) -> None:
         """Zero all buckets (start of a measurement window — e.g. an obs
         capture that wants per-run rather than per-process rates)."""
-        self.hits = self.near_hits = self.misses = 0
+        self.hits = self.near_hits = self.misses = self.quarantined = 0
 
     def __str__(self) -> str:
+        q = f" quarantined={self.quarantined}" if self.quarantined else ""
         return (f"hits={self.hits} near={self.near_hits} "
-                f"misses={self.misses} rate={self.hit_rate:.2f}")
+                f"misses={self.misses} rate={self.hit_rate:.2f}{q}")
 
 
 class PlanCache:
@@ -99,24 +128,73 @@ class PlanCache:
 
     # -- disk ---------------------------------------------------------------
 
+    def _read_blob(self) -> Dict[str, Any]:
+        """One raw read+parse of the cache file (``cache.read`` is the chaos
+        injection site — a ``corrupt-bytes`` clause mangles the payload the
+        parser sees, never the file itself)."""
+        with open(self.file, "rb") as f:
+            data = f.read()
+        data = fault_point("cache.read", data)
+        return json.loads(data.decode("utf-8"))
+
+    def _quarantine(self) -> None:
+        """Move the corrupt file aside (``plans.json.quarantined``) so the
+        cache rebuilds instead of re-raising on every lookup; the event is
+        counted in ``stats`` and on the active obs capture."""
+        try:
+            os.replace(self.file, self.file + ".quarantined")
+        except OSError:
+            return   # raced away / unwritable dir: rebuilding in memory only
+        self.stats.quarantined += 1
+        note_degraded("tune.cache.quarantined", path=self.file)
+
     def _load(self) -> Dict[str, Dict[str, Any]]:
-        """All on-disk entries; {} on absence, corruption or version skew."""
+        """All on-disk entries; {} on absence, corruption or version skew.
+
+        A parse failure is retried (lock-free read-retry: a reader racing
+        an atomic writer may glimpse a partial file on non-atomic-visibility
+        filesystems); a file that *keeps* failing is genuinely corrupt and
+        is quarantined rather than raised on.
+        """
         if self._entries is not None:
             return self._entries
-        try:
-            with open(self.file) as f:
-                blob = json.load(f)
-            if blob.get("version") == CACHE_VERSION:
-                self._entries = dict(blob.get("entries", {}))
-            else:
-                self._entries = {}   # version mismatch: invalidate
-        except (OSError, ValueError):
+        blob = None
+        for retry in range(READ_RETRIES + 1):
+            try:
+                blob = self._read_blob()
+                break
+            except OSError:
+                self._entries = {}   # absent (or vanished mid-race)
+                return self._entries
+            except ValueError:
+                if retry < READ_RETRIES:
+                    _retry_sleep(READ_RETRY_DELAY_S)
+        if blob is None:
+            self._quarantine()
             self._entries = {}
+        elif blob.get("version") == CACHE_VERSION:
+            self._entries = dict(blob.get("entries", {}))
+        else:
+            self._entries = {}   # version mismatch: invalidate
         return self._entries
 
-    def _save(self) -> None:
+    def _save(self, *, merge: bool = True) -> None:
         os.makedirs(self.dir, exist_ok=True)
-        blob = {"version": CACHE_VERSION, "entries": self._load()}
+        entries = self._load()
+        if merge:
+            # Fold in fresh same-version entries from concurrent writers —
+            # two processes tuning disjoint matrices both keep their work.
+            # Best-effort raw read (no retry/quarantine: a transiently
+            # unreadable file just skips the merge; our write still lands).
+            try:
+                with open(self.file) as f:
+                    disk = json.load(f)
+                if disk.get("version") == CACHE_VERSION:
+                    entries = {**dict(disk.get("entries", {})), **entries}
+                    self._entries = entries
+            except (OSError, ValueError):
+                pass
+        blob = {"version": CACHE_VERSION, "entries": entries}
         fd, tmp = tempfile.mkstemp(dir=self.dir, suffix=".tmp")
         try:
             with os.fdopen(fd, "w") as f:
@@ -199,4 +277,5 @@ class PlanCache:
     def clear(self) -> None:
         self._entries = {}
         self._lru.clear()
-        self._save()
+        self._save(merge=False)   # an explicit clear must not resurrect
+        # concurrent writers' entries

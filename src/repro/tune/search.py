@@ -33,6 +33,8 @@ from ..core.formats import CSR, LoopsFormat, loops_from_csr
 from ..core.partition import choose_r_boundary, regularity_boundary
 from ..core.perf_model import QuadraticPerfModel, fit_perf_model
 from ..core.spmm import SpmmPlan, loops_spmm
+from ..resilience.fallback import classify
+from ..resilience.inject import fault_point, note_degraded
 
 __all__ = ["SearchBudget", "SearchResult", "enumerate_plans", "search",
            "prior_model", "measure_plan_gflops"]
@@ -46,6 +48,9 @@ class SearchBudget:
     repeats: int = 3      # timed repetitions per candidate (median)
     warmup: int = 1       # untimed warm-up calls (trigger jit)
     max_trials: int = 12  # hard cap on measured conversions
+    trial_timeout_s: Optional[float] = None  # wall-clock cap per trial —
+    # an overrunning candidate is treated as a failed trial (skipped,
+    # counted), never the winner; None disables the check
 
 
 @dataclasses.dataclass(frozen=True)
@@ -279,7 +284,22 @@ def search(csr: CSR, *, n_cols: int = 32, rhs_shape=None,
     trials: List[Tuple[SpmmPlan, float]] = []
     best_plan, best_fmt, best_g = None, None, -1.0
     for p in survivors:
-        fmt, g = meas(csr, p, b)
+        # Trial isolation (docs/robustness.md): one candidate crashing —
+        # or, under ``trial_timeout_s``, grossly overrunning — must not
+        # abort the whole search.  The failed trial is counted and skipped;
+        # the surviving measurements still rank.  ``tune.trial`` is the
+        # chaos injection site.
+        t0 = time.perf_counter()
+        try:
+            fault_point("tune.trial")
+            fmt, g = meas(csr, p, b)
+        except Exception as e:   # noqa: BLE001 - skipping IS the handler
+            note_degraded("tune.search.trial_failed", reason=classify(e))
+            continue
+        if budget.trial_timeout_s is not None \
+                and time.perf_counter() - t0 > budget.trial_timeout_s:
+            note_degraded("tune.search.trial_failed", reason="timeout")
+            continue
         trials.append((p, g))
         if recorder is not None:
             from .fingerprint import effective_n_cols as _eff
@@ -291,6 +311,15 @@ def search(csr: CSR, *, n_cols: int = 32, rhs_shape=None,
                                  gflops=g)
         if g > best_g:
             best_plan, best_fmt, best_g = p, fmt, g
-    assert best_plan is not None and best_fmt is not None
+    if best_plan is None:
+        # Every trial failed: degrade to the model-ranked front-runner (the
+        # Eq. 2 prior / replay ranking) rather than raising — the same plan
+        # the paper's low-cost scheduler would have picked with no
+        # measurement at all.  gflops=0.0 marks the record as unmeasured.
+        note_degraded("tune.search.degraded", reason="all-trials-failed")
+        best_plan = survivors[0] if survivors else scored[0]
+        best_fmt = loops_from_csr(csr, best_plan.r_boundary, best_plan.br,
+                                  panel_g=best_plan.panel_g)
+        best_g = 0.0
     return SearchResult(plan=best_plan, fmt=best_fmt, gflops=best_g,
                         trials=tuple(trials))

@@ -40,3 +40,22 @@ def test_docs_cover_the_observability_surface():
     assert "## 8. Runtime observability" in arch
     for needle in ("observe_in_jit", "tune.cache.", "obs_file"):
         assert needle in arch, f"architecture.md §8 lost '{needle}'"
+
+
+def test_docs_cover_the_robustness_surface():
+    """robustness.md and architecture.md §9 mention the load-bearing
+    resilience entry points (taxonomy, chain order, site names, gates)."""
+    rob = (ROOT / "docs" / "robustness.md").read_text()
+    arch = (ROOT / "docs" / "architecture.md").read_text()
+    readme = (ROOT / "README.md").read_text()
+    for needle in ("SparseInputError", "DEFECT_KINDS", "run_chain",
+                   "REPRO_FAULT_PLAN", "REPRO_NO_FALLBACK", "fault_point",
+                   "pallas → interpret → jnp", "plans.json.quarantined",
+                   "trial_timeout_s", "--fail-on-degraded",
+                   "--require-degraded", "retry_with_backoff",
+                   "on_miss"):
+        assert needle in rob, f"docs/robustness.md lost '{needle}'"
+    assert "## 9. Resilience" in arch
+    for needle in ("fault_point", "engine.fallback", "REPRO_NO_FALLBACK"):
+        assert needle in arch, f"architecture.md §9 lost '{needle}'"
+    assert "docs/robustness.md" in readme

@@ -13,10 +13,19 @@ are reconstructed) — and prints:
   * tuner plan-cache hit rate (``tune.cache.*`` gauges, per watched cache),
   * throughput gauges (``serve.tokens_per_s``, ``train.steps_per_s``, ...).
 
+  * degradations — every resilience counter the run recorded
+    (``engine.fallback``, ``serve.degraded``, ``tune.cache.quarantined``,
+    ``tune.search.trial_failed``, ``dist.fallback``, ``validate.repaired``,
+    ``inject.fired``, ...; see docs/robustness.md).
+
 Exit codes: 0 on a rendered report, 2 on an empty capture, 1 on an
 unreadable/invalid file.  ``--require-dispatch`` additionally exits 3 when
 the capture holds no nonzero ``engine.dispatch`` counter — CI uses this to
 assert the serve smoke run actually exercised the kernel engine.
+``--fail-on-degraded`` exits 4 when ANY degradation counter is nonzero
+(the normal CI path asserts a clean run); ``--require-degraded METRIC``
+(repeatable) exits 5 unless that degradation metric is nonzero (the chaos
+CI asserts its injected faults actually degraded, not crashed).
 
 Run:  python tools/obs_report.py benchmarks/results/obs/serve.jsonl
 """
@@ -33,6 +42,15 @@ ROOT = pathlib.Path(__file__).resolve().parent.parent
 sys.path.insert(0, str(ROOT / "src"))
 
 from repro.obs.export import load_obs  # noqa: E402
+
+# Resilience counters (docs/robustness.md): any nonzero value here means the
+# run degraded somewhere — fell back, retried, repaired, or quarantined.
+DEGRADATION_METRICS = (
+    "engine.fallback", "serve.degraded", "serve.retries",
+    "tune.cache.quarantined", "tune.search.trial_failed",
+    "tune.search.degraded", "dist.fallback", "validate.repaired",
+    "inject.fired",
+)
 
 
 def records_from_chrome(path: pathlib.Path) -> List[Dict]:
@@ -172,7 +190,33 @@ def report(records: List[Dict], *, top: int = 10,
             out(f"  {g['metric']}{_label_str(g.get('labels', {}))} = "
                 f"{float(g.get('value', 0.0)):.2f}")
 
-    return {"spans": len(spans), "dispatches": n_disp}
+    # Degradations: per-metric totals across counters, plus the
+    # tune.cache.quarantined gauge (counter and gauge describe the same
+    # events — take the max per metric, never the sum, to avoid double
+    # counting a quarantine that landed on both).
+    degr_rows = defaultdict(float)
+    degraded: Dict[str, float] = defaultdict(float)
+    gauge_q = 0.0
+    for c in counters:
+        m = c.get("metric", "")
+        if m in DEGRADATION_METRICS:
+            degr_rows[f"{m}{_label_str(c.get('labels', {}))}"] += \
+                float(c.get("value", 0))
+            degraded[m] += float(c.get("value", 0))
+    for g in gauges:
+        if g.get("metric") == "tune.cache.quarantined_files":
+            gauge_q += float(g.get("value", 0.0))
+    if gauge_q > degraded.get("tune.cache.quarantined", 0.0):
+        degraded["tune.cache.quarantined"] = gauge_q
+        degr_rows["tune.cache.quarantined (gauge)"] = gauge_q
+    if degr_rows:
+        out("\ndegradations (fallbacks / retries / repairs / quarantines):")
+        for name, v in sorted(degr_rows.items()):
+            out(f"  {name:<60} {int(v):>6}")
+    n_degraded = sum(v for v in degraded.values() if v > 0)
+
+    return {"spans": len(spans), "dispatches": n_disp,
+            "degraded": dict(degraded), "n_degraded": int(n_degraded)}
 
 
 def main(argv=None) -> int:
@@ -185,6 +229,13 @@ def main(argv=None) -> int:
     ap.add_argument("--require-dispatch", action="store_true",
                     help="exit 3 unless a nonzero engine.dispatch counter "
                          "is present (CI smoke gate)")
+    ap.add_argument("--fail-on-degraded", action="store_true",
+                    help="exit 4 if ANY degradation counter is nonzero "
+                         "(normal-path CI gate)")
+    ap.add_argument("--require-degraded", action="append", default=[],
+                    metavar="METRIC",
+                    help="exit 5 unless this degradation metric is nonzero "
+                         "(repeatable; chaos-CI gate)")
     args = ap.parse_args(argv)
 
     try:
@@ -200,6 +251,16 @@ def main(argv=None) -> int:
         print("obs_report: no nonzero engine.dispatch counters "
               "(--require-dispatch)", file=sys.stderr)
         return 3
+    if args.fail_on_degraded and stats["n_degraded"] > 0:
+        print(f"obs_report: degradations recorded "
+              f"({stats['degraded']}) (--fail-on-degraded)",
+              file=sys.stderr)
+        return 4
+    for metric in args.require_degraded:
+        if stats["degraded"].get(metric, 0) <= 0:
+            print(f"obs_report: degradation metric {metric!r} is zero "
+                  f"(--require-degraded)", file=sys.stderr)
+            return 5
     return 0
 
 
