@@ -22,6 +22,8 @@ committed baseline via tools/perf_gate.py.
                    forces one: ``python -m benchmarks.spmm_dryrun``)
   compress_bytes — int8/bf16 compressed-psum collective bytes; skip-records
                    unless 16 devices are live (standalone CLI forces them)
+  serve_traffic  — closed-loop serving load through the continuous-batching
+                   queue: p50/p99 latency + goodput, batched vs no-batching
 
 ``--smoke`` shrinks the suites that support it (tiny matrices, fewer
 repeats) for CI: kernel-layer regressions then surface as benchmark
@@ -59,7 +61,7 @@ DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "results",
 def _suite_registry():
     from . import (autotune_suite, batched_spmm, compress_bytes,
                    fig4_throughput, fig5_halfprec, roofline, sec43_scheduling,
-                   spmm_dryrun, table3_energy, table4_gnn)
+                   serve_traffic, spmm_dryrun, table3_energy, table4_gnn)
     return {
         "fig4": fig4_throughput.main,
         "fig5": fig5_halfprec.main,
@@ -71,13 +73,15 @@ def _suite_registry():
         "batched": batched_spmm.main,
         "spmm_dryrun": spmm_dryrun.bench_main,
         "compress_bytes": compress_bytes.main,
+        "serve_traffic": serve_traffic.main,
     }
 
 
 # Keep --only's help in sync with the registry without importing the suite
 # modules (and therefore jax) just to print --help.
 SUITE_NAMES = ["fig4", "fig5", "sec43", "table3", "table4", "roofline",
-               "autotune", "batched", "spmm_dryrun", "compress_bytes"]
+               "autotune", "batched", "spmm_dryrun", "compress_bytes",
+               "serve_traffic"]
 
 
 def main() -> None:

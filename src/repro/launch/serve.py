@@ -1,21 +1,27 @@
-"""Batched serving driver: prefill a prompt batch, then decode N tokens.
+"""Serving driver: continuous-batching queue over the compiled step halves.
 
-Uses the two compiled halves from ``repro.dist.step``:
-``build_prefill`` (batch -> sharded KV cache + last logits) and
-``build_serve_step`` (one cache-donating decode step).  Between them the
-cache's sequence axis is grown once to prompt+gen length — decode then runs
-allocation-free.
+Requests flow through :mod:`repro.serve` (PR 9, docs/serving.md): the pure
+injectable-clock scheduler coalesces same-prompt-shape requests into ragged
+batches padded to the engine's batch-block grid, ``ServeQueue`` executes the
+resulting prefill/decode actions through the two compiled halves from
+``repro.dist.step`` (``build_prefill`` / cache-donating ``build_serve_step``)
+via a warm :class:`~repro.serve.queue.ExecutorPool`, and admission control
+sheds overload with a counted ``serve.rejected``.
 
-Observability (``--obs``): the run is captured by a :class:`repro.obs.Obs`
-— engine dispatch counters via the kernel-registry tracer hook, per-request
-prefill latency and per-token decode latency histograms (the exact
-accounting the ROADMAP's admission-control item consumes), spans around
-every phase, and a LOOPS plan-cache warm-up for the model's FFN weight
-shapes (the "warm plan-cache pool" half of continuous batching: the tuner
-search is paid before traffic, never on the hot path, and the cache hit
-rate is exported as ``tune.cache.*`` gauges).  The capture saves a
-versioned JSONL plus a Perfetto-loadable Chrome trace under
+Observability (``--obs``): the run is captured by a :class:`repro.obs.Obs` —
+engine dispatch counters via the kernel-registry tracer hook, per-request
+``serve.prefill_us`` / ``serve.decode_token_us`` / ``serve.ttft_us`` /
+``serve.request_us`` histograms, ``serve.queue_depth`` / ``serve.in_flight``
+gauges, spans around every phase, and a LOOPS plan-cache warm-up for the
+model's FFN weight shapes (the "warm plan-cache pool" half of continuous
+batching: the tuner search is paid before traffic, then bulk-installed into
+the serving pool via ``PlanCache.prewarm`` — never on the hot path).  The
+capture saves a versioned JSONL plus a Perfetto-loadable Chrome trace under
 ``benchmarks/results/obs/``; render either with ``tools/obs_report.py``.
+
+Resilience (PR 8, docs/robustness.md): ``REPRO_FAULT_PLAN`` is honoured,
+every engine call passes the ``serve.prefill`` / ``serve.step`` fault points
+and retries with backoff, and retries/degraded plans are counted.
 
 Demonstrates the serving path end-to-end on CPU with a reduced config:
 
@@ -26,40 +32,26 @@ from __future__ import annotations
 
 import argparse
 import contextlib
+import os
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from ..configs import REDUCED, get_config
-from ..dist import step as step_lib
-from ..models import api, frontends
-from ..resilience.fallback import retry_with_backoff
 from ..resilience.inject import fault_point, install_from_env, note_degraded
+# compat re-export: the cache-padding helper moved to the serve package
+# (tests and notebooks import it from here)
+from ..serve.queue import pad_cache  # noqa: F401
+from ..serve.queue import ServeQueue
+from ..serve.scheduler import POLICIES, SchedulerConfig
 from .mesh import make_test_mesh
 
 
-def pad_cache(cfg, cache, max_len: int):
-    """Grow the prefill cache's sequence axis to ``max_len`` (headroom for
-    decode).  Window-capped and state caches are already final-size."""
-    def leaf(path, x):
-        names = [getattr(k, "key", str(k)) for k in path]
-        if names[-1] in ("k", "v") and x.ndim == 5:
-            cap = max_len
-            if cfg.sliding_window:
-                cap = min(max_len, cfg.sliding_window)
-            if x.shape[2] < cap:
-                pad = [(0, 0)] * 5
-                pad[2] = (0, cap - x.shape[2])
-                return jnp.pad(x, pad)
-        return x
-    return jax.tree_util.tree_map_with_path(leaf, cache)
-
-
 def warm_spmm_plan_cache(cfg, params, obs, *, sparsity: float = 0.9,
-                         n_cols: int = 8, on_miss: str = "search"):
-    """Warm the LOOPS plan cache for this model's FFN weight shapes.
+                         n_cols: int = 8, on_miss: str = "search",
+                         pool=None):
+    """Warm the LOOPS plan pool for this model's FFN weight shapes.
 
     The "warm plan-cache pool" prerequisite of continuous batching
     (ROADMAP item 1): magnitude-prune each layer's FFN weight, tune-or-
@@ -72,6 +64,12 @@ def warm_spmm_plan_cache(cfg, params, obs, *, sparsity: float = 0.9,
     (MoE/SSM variants) warm a synthetic ``(4*d_model, d_model)`` matrix of
     the same sparsity instead.
 
+    The tuned records are then bulk-installed into the serving ``pool``
+    (default: a ``serve-pool`` cache beside the tuning store) in ONE atomic
+    write via :meth:`repro.tune.PlanCache.prewarm` — ``stats.prewarmed``
+    counts exactly the newly installed keys, so a re-warmed pool counts
+    zero and no request ever pays a tuner search on the hot path.
+
     Resilience (docs/robustness.md): the weight passes an
     ``ingest.serve.weights`` fault point and the pruned CSR is validated
     with ``repair="drop"`` — corrupt values are repaired (and counted)
@@ -79,12 +77,17 @@ def warm_spmm_plan_cache(cfg, params, obs, *, sparsity: float = 0.9,
     cache-miss policy to degraded mode: serve the Eq. 2 model-prior plan
     immediately (no measurement sweep on the request path), counting each
     such miss as ``serve.degraded{reason="plan-cache-miss"}``.
+
+    Returns the warmed pool cache.
     """
+    import jax.numpy as jnp
+
     from ..core.formats import csr_from_dense
     from ..core.spmm import loops_spmm
     from ..models.sparse_ffn import magnitude_prune
     from ..resilience.validate import validate_csr
     from ..tune import PlanCache, SearchBudget, autotune
+    from ..tune.fingerprint import cache_key, fingerprint
 
     cache = PlanCache()
     cache.stats.reset()
@@ -101,6 +104,7 @@ def warm_spmm_plan_cache(cfg, params, obs, *, sparsity: float = 0.9,
         d = cfg.d_model
         weights = [rng.standard_normal((4 * d, d)).astype(np.float32)]
 
+    keys = []
     for i, w in enumerate(weights):
         with obs.span("serve.warm_plan", cat="warm", layer=i):
             w = np.asarray(fault_point("ingest.serve.weights", w))
@@ -112,23 +116,51 @@ def warm_spmm_plan_cache(cfg, params, obs, *, sparsity: float = 0.9,
                                   on_miss=on_miss)
             if on_miss == "model" and cache.stats.misses > misses0:
                 note_degraded("serve.degraded", reason="plan-cache-miss")
+            keys.append(cache_key(fingerprint(csr), n_cols=n_cols,
+                                  dtype=csr.vals.dtype, backend="jnp"))
             x = jnp.ones((csr.ncols, n_cols), jnp.float32)
             jax.block_until_ready(loops_spmm(fmt, x))
+    # Hand the tuned plans to the serving pool in one bulk write.
+    if pool is None:
+        pool = PlanCache(os.path.join(cache.dir, "serve-pool"))
+    obs.watch_cache(pool, name="serve-pool")
+    records = [cache.peek(k) for k in dict.fromkeys(keys)]
+    installed = pool.prewarm([r for r in records if r is not None])
     obs.gauge("serve.warm_layers").set(len(weights))
-    return cache
+    obs.gauge("serve.prewarmed_plans").set(installed)
+    return pool
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="number of concurrent requests to submit")
     ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen-len", type=int, default=16)
+    ap.add_argument("--gen-len", type=int, default=16,
+                    help="tokens generated per request (prefill's first "
+                         "token included)")
     ap.add_argument("--mesh-data", type=int, default=1)
     ap.add_argument("--mesh-model", type=int, default=1)
     ap.add_argument("--temperature", type=float, default=0.0)
-    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--seed", type=int,
+                    default=int(os.environ.get("REPRO_TEST_SEED", "0")),
+                    help="params/prompt/sampling seed (default honours "
+                         "REPRO_TEST_SEED for machine-reproducible runs)")
+    # continuous-batching knobs (docs/serving.md)
+    ap.add_argument("--max-batch", type=int, default=8,
+                    help="requests coalesced per prefill call")
+    ap.add_argument("--min-batch", type=int, default=1)
+    ap.add_argument("--max-wait-ms", type=float, default=50.0,
+                    help="batch-formation timeout for the oldest request")
+    ap.add_argument("--max-in-flight", type=int, default=2,
+                    help="groups admitted to the engine at once")
+    ap.add_argument("--max-queue-depth", type=int, default=64,
+                    help="admission control: submits beyond this are shed "
+                         "(counted as serve.rejected)")
+    ap.add_argument("--policy", choices=POLICIES, default="prefill-first",
+                    help="prefill/decode interleave policy")
     ap.add_argument("--obs", nargs="?", const="serve", default=None,
                     metavar="STEM",
                     help="capture runtime metrics/spans; writes STEM.jsonl "
@@ -165,21 +197,8 @@ def main():
 
     cfg = REDUCED[args.arch]() if args.reduced else get_config(args.arch)
     mesh = make_test_mesh(args.mesh_data, args.mesh_model)
+    from ..models import api
     params = api.init_params(cfg, jax.random.key(args.seed))
-    max_len = args.prompt_len + args.gen_len
-
-    key = jax.random.key(args.seed + 1)
-    batch = {"tokens": jax.random.randint(
-        key, (args.batch, args.prompt_len), 0, cfg.vocab_size, jnp.int32)}
-    if cfg.frontend == "vision_stub":
-        batch["patches"] = frontends.vision_patches_stub(cfg, args.batch)
-    if cfg.frontend == "audio_stub":
-        batch["frames"] = frontends.audio_frames_stub(cfg, args.batch)
-
-    pav = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
-                       params)
-    bav = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
-                       batch)
 
     # Degraded-mode step execution: transient host-level failures retry
     # with exponential backoff under the optional per-request deadline;
@@ -194,82 +213,49 @@ def main():
             note_degraded("serve.retries")),
     )
 
+    sched_cfg = SchedulerConfig(
+        max_queue_depth=args.max_queue_depth,
+        max_in_flight=args.max_in_flight,
+        max_batch=args.max_batch, min_batch=args.min_batch,
+        max_wait_s=args.max_wait_ms / 1e3, policy=args.policy)
+
     engine_ctx = obs.attach_engine() if obs else contextlib.nullcontext()
     with engine_ctx:
         if obs is not None and not args.no_warm_spmm_cache:
             warm_spmm_plan_cache(cfg, params, obs,
                                  on_miss=args.plan_on_miss)
 
-        prefill_fn, _, _ = step_lib.build_prefill(cfg, mesh, pav, bav,
-                                                  obs=obs)
+        queue = ServeQueue(cfg, mesh, params, config=sched_cfg, obs=obs,
+                           temperature=args.temperature, seed=args.seed,
+                           retry_kw=retry_kw)
 
-        def run_prefill():
-            fault_point("serve.prefill")
-            return prefill_fn(params, batch)
-
+        # Seeded prompt set: one request per row, all through the queue.
+        rng = np.random.default_rng(args.seed + 1)
+        prompts = rng.integers(0, cfg.vocab_size,
+                               (args.batch, args.prompt_len))
         t0 = time.perf_counter()
-        cache, logits = retry_with_backoff(run_prefill, **retry_kw)
-        jax.block_until_ready(logits)
-        t_pf_call = time.perf_counter() - t0
-        if obs is not None:
-            # Every request in the coalesced batch experienced the batch
-            # call's latency — one observation per request, the accounting
-            # admission control will consume.
-            pf_hist = obs.histogram("serve.prefill_us")
-            for _ in range(args.batch):
-                pf_hist.observe(t_pf_call * 1e6)
-            obs.counter("serve.requests").inc(args.batch)
-        extra = cfg.num_patches if cfg.frontend == "vision_stub" else 0
-        cache = pad_cache(cfg, cache, max_len + extra)
-        cav = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
-                           cache)
-        serve_fn, _, _ = step_lib.build_serve_step(cfg, mesh, pav, cav,
-                                                   obs=obs)
-        t_prefill = time.perf_counter() - t0
+        reqs = [queue.submit([int(t) for t in row], args.gen_len)
+                for row in prompts]
+        done = queue.drain()
+        t_total = time.perf_counter() - t0
 
-        def sample(lg, k):
-            if args.temperature <= 0:
-                return jnp.argmax(lg, axis=-1)
-            return jax.random.categorical(k, lg / args.temperature, axis=-1)
-
-        toks = sample(logits, key)[:, None].astype(jnp.int32)
-        out_tokens = [toks]
-        # prefill offset: vlm prefixes shift absolute positions
-        pos0 = args.prompt_len + (cfg.num_patches
-                                  if cfg.frontend == "vision_stub" else 0)
-        tok_hist = obs.histogram("serve.decode_token_us") if obs else None
-        t0 = time.perf_counter()
-        def run_step(c, tk, pos):
-            # the fault point fires BEFORE serve_fn, so a retried step never
-            # reuses an already-donated cache buffer
-            fault_point("serve.step")
-            return serve_fn(params, c, tk, pos)
-
-        for i in range(args.gen_len - 1):
-            t_step = time.perf_counter()
-            cache, logits = retry_with_backoff(
-                run_step, cache, toks, jnp.int32(pos0 + i), **retry_kw)
-            key, sub = jax.random.split(key)
-            toks = sample(logits, sub)[:, None].astype(jnp.int32)
-            jax.block_until_ready(toks)
-            if tok_hist is not None:
-                # per-token decode latency: the step's wall clock is what a
-                # request waits for its next token
-                tok_hist.observe((time.perf_counter() - t_step) * 1e6)
-            out_tokens.append(toks)
-        t_decode = time.perf_counter() - t0
-
-    gen = np.concatenate([np.asarray(t) for t in out_tokens], axis=1)
-    tps = args.batch * (args.gen_len - 1) / max(t_decode, 1e-9)
-    print(f"prefill {args.batch}x{args.prompt_len} in {t_prefill:.2f}s; "
-          f"decoded {args.gen_len - 1} steps at {tps:.1f} tok/s")
-    print("generated token ids (first row):", gen[0][:16])
+    rejected = queue.sched.counters["rejected"]
+    n_tokens = sum(r.tokens_generated for r in done)
+    tps = n_tokens / max(t_total, 1e-9)
+    print(f"served {len(done)}/{len(reqs)} requests "
+          f"({args.batch}x{args.prompt_len}+{args.gen_len}) in "
+          f"{t_total:.2f}s; {n_tokens} tokens at {tps:.1f} tok/s; "
+          f"{queue.sched.counters['prefill_batches']} prefill batches, "
+          f"{queue.sched.counters['decode_steps']} decode steps, "
+          f"{rejected} rejected")
+    if done:
+        print("generated token ids (first request):",
+              np.asarray(done[0].tokens[:16]))
 
     if obs is not None:
         from ..obs import set_active
         obs.gauge("serve.tokens_per_s").set(tps)
-        obs.counter("serve.tokens_generated").inc(
-            args.batch * len(out_tokens))
+        obs.counter("serve.tokens_generated").inc(n_tokens)
         jsonl, chrome = obs.save(args.obs_dir, stem=args.obs)
         print(f"obs: {jsonl}")
         print(f"obs: {chrome}  (load in ui.perfetto.dev)")

@@ -172,6 +172,8 @@ class Obs:
             # (note_degraded): the registry forbids one name in two kinds
             self.metrics.gauge("tune.cache.quarantined_files",
                                cache=name).set(st.quarantined)
+            self.metrics.gauge("tune.cache.prewarmed",
+                               cache=name).set(getattr(st, "prewarmed", 0))
 
     # -- step seam ---------------------------------------------------------
 

@@ -1,0 +1,29 @@
+"""Continuous-batching serving layer (docs/serving.md).
+
+Split along the JAX boundary:
+
+  * :mod:`repro.serve.session` / :mod:`repro.serve.scheduler` — pure
+    Python request lifecycle and the injectable-clock scheduling state
+    machine (admission, shape-keyed coalescing, prefill/decode
+    interleave).  No JAX anywhere in the import chain, so the whole
+    policy surface unit-tests with a fake clock.
+  * :mod:`repro.serve.queue` — the device half: ``ServeQueue`` turns
+    scheduler actions into coalesced ``dist/step.py`` prefill/decode
+    calls through a warm ``ExecutorPool``, with obs latency accounting
+    and the PR 7–8 fault/retry/degraded paths intact.
+
+``launch/serve.py`` is the CLI over this package; the closed-loop load
+benchmark is ``benchmarks/serve_traffic.py``.
+"""
+from .scheduler import (MAX_BATCH_BLOCK, POLICIES, Decode, Group, Prefill,
+                        Scheduler, SchedulerConfig, batch_block,
+                        padded_batch)
+from .session import (ACTIVE, DONE, EVICTED, QUEUED, REJECTED,
+                      TERMINAL_STATES, Request, make_request)
+
+__all__ = [
+    "Scheduler", "SchedulerConfig", "Group", "Prefill", "Decode",
+    "batch_block", "padded_batch", "MAX_BATCH_BLOCK", "POLICIES",
+    "Request", "make_request", "QUEUED", "ACTIVE", "DONE", "REJECTED",
+    "EVICTED", "TERMINAL_STATES",
+]

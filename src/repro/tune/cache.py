@@ -94,6 +94,9 @@ class CacheStats:
     quarantined: int = 0  # corrupt files moved to *.quarantined (not a
     # lookup bucket: quarantine happens during _load, the lookup that
     # triggered it still counts its own miss)
+    prewarmed: int = 0   # records bulk-installed by :meth:`PlanCache.prewarm`
+    # (not a lookup bucket either: counted exactly once per NEWLY installed
+    # key — re-prewarming an already-present record counts nothing)
 
     @property
     def lookups(self) -> int:
@@ -108,11 +111,13 @@ class CacheStats:
         """Zero all buckets (start of a measurement window — e.g. an obs
         capture that wants per-run rather than per-process rates)."""
         self.hits = self.near_hits = self.misses = self.quarantined = 0
+        self.prewarmed = 0
 
     def __str__(self) -> str:
         q = f" quarantined={self.quarantined}" if self.quarantined else ""
+        w = f" prewarmed={self.prewarmed}" if self.prewarmed else ""
         return (f"hits={self.hits} near={self.near_hits} "
-                f"misses={self.misses} rate={self.hit_rate:.2f}{q}")
+                f"misses={self.misses} rate={self.hit_rate:.2f}{q}{w}")
 
 
 class PlanCache:
@@ -234,6 +239,40 @@ class PlanCache:
         self._load()[key] = record
         self._touch(key, record)
         self._save()
+
+    def prewarm(self, records) -> int:
+        """Bulk-install tuned records ahead of traffic (the warm-pool path:
+        ``launch/serve.py`` tunes once, every serving process prewarms).
+
+        ``records`` is either an iterable of ``make_record``-schema dicts —
+        keys are rebuilt from each record's stored fingerprint + execution
+        context via ``fingerprint.cache_key_from_features`` — or a mapping
+        of explicit ``{key: record}``.  Only keys not already present are
+        installed, in ONE atomic save (``put`` would pay a disk write per
+        record), and ``stats.prewarmed`` counts exactly the newly installed
+        keys: re-prewarming the same set is a no-op that counts zero and
+        never touches disk.  Returns the number installed.
+        """
+        from .fingerprint import cache_key_from_features
+        if hasattr(records, "items"):
+            pairs = list(records.items())
+        else:
+            pairs = [(cache_key_from_features(
+                rec["fingerprint"], n_cols=rec["n_cols"],
+                dtype=rec["dtype"], backend=rec["backend"]), rec)
+                for rec in records]
+        entries = self._load()
+        installed = 0
+        for key, rec in pairs:
+            if key in entries:
+                continue
+            entries[key] = rec
+            self._touch(key, rec)
+            installed += 1
+        if installed:
+            self._save()
+        self.stats.prewarmed += installed
+        return installed
 
     def nearest(self, features, *, dtype: str, n_cols: int, backend: str,
                 max_distance: float) -> Optional[Dict[str, Any]]:

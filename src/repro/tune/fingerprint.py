@@ -27,7 +27,8 @@ import numpy as np
 from ..core.formats import CSR, LoopsFormat
 
 __all__ = ["Fingerprint", "fingerprint", "loops_fingerprint", "cache_key",
-           "feature_distance", "effective_n_cols"]
+           "cache_key_from_features", "feature_distance",
+           "effective_n_cols"]
 
 # Block height used for the block-density feature.  Fixed (not the plan's Br)
 # so fingerprints are comparable before any plan exists.
@@ -153,9 +154,20 @@ def feature_distance(a: np.ndarray, b: np.ndarray) -> float:
     return float(np.sqrt(np.mean((a - b) ** 2)))
 
 
-def cache_key(fp: Fingerprint, *, n_cols: int, dtype, backend: str) -> str:
-    """Stable cache key: quantised structure + execution context."""
-    payload = ",".join(f"{q:.1f}" for q in fp.quantised())
+def cache_key_from_features(features, *, n_cols: int, dtype,
+                            backend: str) -> str:
+    """Key from a raw feature vector (what cache records store) — the bulk
+    ``PlanCache.prewarm`` path rebuilds keys through here, so a record
+    round-tripped through the cache rehashes to the key ``cache_key`` would
+    have minted for its source matrix."""
+    quant = tuple(round(float(f) * 2.0) / 2.0 for f in features)
+    payload = ",".join(f"{q:.1f}" for q in quant)
     ctx = f"{np.dtype(dtype).name}|n{int(n_cols)}|{backend}"
     digest = hashlib.sha1(f"{payload}|{ctx}".encode()).hexdigest()[:16]
     return f"v-{digest}"
+
+
+def cache_key(fp: Fingerprint, *, n_cols: int, dtype, backend: str) -> str:
+    """Stable cache key: quantised structure + execution context."""
+    return cache_key_from_features(fp.features(), n_cols=n_cols,
+                                   dtype=dtype, backend=backend)

@@ -59,3 +59,22 @@ def test_docs_cover_the_robustness_surface():
     for needle in ("fault_point", "engine.fallback", "REPRO_NO_FALLBACK"):
         assert needle in arch, f"architecture.md §9 lost '{needle}'"
     assert "docs/robustness.md" in readme
+
+
+def test_docs_cover_the_serving_surface():
+    """serving.md and architecture.md §10 mention the load-bearing serving
+    entry points (lifecycle, knobs, clocks, warm pools, benchmark)."""
+    serving = (ROOT / "docs" / "serving.md").read_text()
+    arch = (ROOT / "docs" / "architecture.md").read_text()
+    readme = (ROOT / "README.md").read_text()
+    for needle in ("shape_key", "max_queue_depth", "max_in_flight",
+                   "max_wait_s", "serve.rejected", "scheduler clock",
+                   "wall clock", "padded_batch", "ExecutorPool", "prewarm",
+                   "sample_token", "serve_traffic", "REPRO_TEST_SEED",
+                   "prefill-first", "serve.ttft_us"):
+        assert needle in serving, f"docs/serving.md lost '{needle}'"
+    assert "## 10. Serving" in arch
+    for needle in ("ServeQueue", "padded_batch", "prewarm",
+                   "virtual clock"):
+        assert needle in arch, f"architecture.md §10 lost '{needle}'"
+    assert "docs/serving.md" in readme

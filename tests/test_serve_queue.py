@@ -1,0 +1,478 @@
+"""Fake-clock unit tests for the pure serving scheduler.
+
+The whole point of splitting ``repro.serve`` into a policy half
+(``scheduler.py``/``session.py``) and a device half (``queue.py``) is that
+admission control, coalescing, fairness and deadline handling are testable
+as plain Python over explicit ``now`` values.  Accordingly this file
+imports **no JAX and no numpy** — a static test at the bottom pins the
+policy modules to that diet too, so a future edit can't quietly drag an
+array library into the decision path.
+
+Clock convention: ``now`` is just a float the test advances by hand.
+"""
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+from repro.serve.scheduler import (MAX_BATCH_BLOCK, POLICIES, Decode, Group,
+                                   Prefill, Scheduler, SchedulerConfig,
+                                   batch_block, padded_batch)
+from repro.serve.session import (ACTIVE, DONE, EVICTED, QUEUED, REJECTED,
+                                 TERMINAL_STATES, Request, make_request)
+
+
+def mk(prompt_len=8, gen_len=4, now=0.0, deadline_s=None):
+    return make_request(prompt_len=prompt_len, gen_len=gen_len, now=now,
+                        deadline_s=deadline_s)
+
+
+def sched(**kw):
+    return Scheduler(SchedulerConfig(**kw))
+
+
+def run_prefill(s, now=0.0):
+    """Poll expecting a Prefill; ack it and return the group."""
+    action = s.poll(now)
+    assert isinstance(action, Prefill), f"expected Prefill, got {action}"
+    s.note_prefill_done(action.group.gid, now)
+    return action.group
+
+
+# ---------------------------------------------------------------------------
+# grid mirrors: batch_block / padded_batch value tables
+# ---------------------------------------------------------------------------
+
+def test_batch_block_values():
+    # largest divisor of batch that is <= MAX_BATCH_BLOCK
+    assert MAX_BATCH_BLOCK == 8
+    expected = {1: 1, 2: 2, 3: 3, 4: 4, 5: 5, 6: 6, 7: 7, 8: 8,
+                9: 3, 10: 5, 11: 1, 12: 6, 13: 1, 16: 8, 24: 8, 40: 8}
+    for batch, blk in expected.items():
+        assert batch_block(batch) == blk, batch
+    assert batch_block(0) == 1 and batch_block(-3) == 1
+
+
+def test_padded_batch_values():
+    # <= MAX_BATCH_BLOCK is never padded; awkward sizes round up to full
+    # blocks only when that walks fewer grid-step groups
+    for batch in range(1, MAX_BATCH_BLOCK + 1):
+        assert padded_batch(batch) == batch
+    expected = {9: 16, 10: 10, 11: 16, 12: 12, 13: 16, 14: 14, 16: 16}
+    for batch, padded in expected.items():
+        assert padded_batch(batch) == padded, batch
+    assert padded_batch(0) == 0
+
+
+def test_padded_batch_never_shrinks_and_stays_blocked():
+    for batch in range(1, 64):
+        p = padded_batch(batch)
+        assert p >= batch
+        assert p % batch_block(p) == 0
+
+
+# ---------------------------------------------------------------------------
+# session: make_request validation + latency fields
+# ---------------------------------------------------------------------------
+
+def test_make_request_validation():
+    with pytest.raises(ValueError, match="prompt token ids"):
+        make_request()
+    with pytest.raises(ValueError, match="positive"):
+        make_request(prompt_len=0)
+    with pytest.raises(ValueError, match="gen_len"):
+        make_request(prompt_len=4, gen_len=0)
+    with pytest.raises(ValueError, match="contradicts"):
+        make_request(prompt=[1, 2, 3], prompt_len=4)
+
+
+def test_make_request_prompt_inference_and_rids():
+    r = make_request(prompt=[5, 6, 7], gen_len=2, now=1.5)
+    assert r.prompt == (5, 6, 7) and r.prompt_len == 3
+    assert r.shape_key == (3,) and r.arrival_s == 1.5
+    assert r.state == QUEUED and not r.finished
+    r2 = make_request(prompt_len=3)
+    assert r2.rid > r.rid                       # fresh ids are monotonic
+    assert make_request(prompt_len=3, rid=99).rid == 99   # pinnable
+
+
+def test_request_identity_not_field_equality():
+    a, b = mk(), mk()
+    a.rid = b.rid = 7
+    assert a != b and a in [a] and b not in [a]
+
+
+def test_request_latency_fields_none_until_stamped():
+    r = mk(gen_len=3, now=10.0)
+    assert r.queue_wait_s is None and r.ttft_s is None and r.e2e_s is None
+    assert r.wall_ttft_s is None and r.wall_e2e_s is None
+    r.admitted_s, r.prefill_start_s = 10.0, 12.0
+    r.first_token_s, r.finish_s = 13.0, 15.0
+    assert r.queue_wait_s == 2.0 and r.ttft_s == 3.0 and r.e2e_s == 5.0
+
+
+def test_request_expiry_is_strict():
+    r = mk(deadline_s=5.0)
+    assert not r.expired(5.0) and r.expired(5.0001)
+    assert not mk().expired(1e9)                # no deadline, never expires
+
+
+# ---------------------------------------------------------------------------
+# config validation
+# ---------------------------------------------------------------------------
+
+def test_config_validation():
+    with pytest.raises(ValueError, match="policy"):
+        SchedulerConfig(policy="round-robin")
+    with pytest.raises(ValueError, match="min_batch"):
+        SchedulerConfig(min_batch=5, max_batch=4)
+    with pytest.raises(ValueError, match=">= 1"):
+        SchedulerConfig(max_batch=0)
+    assert set(POLICIES) == {"prefill-first", "decode-first"}
+
+
+# ---------------------------------------------------------------------------
+# admission control
+# ---------------------------------------------------------------------------
+
+def test_admission_fifo_and_counters():
+    s = sched()
+    reqs = [mk(now=float(i)) for i in range(3)]
+    for i, r in enumerate(reqs):
+        assert s.submit(r, float(i))
+        assert r.admitted_s == float(i)
+    assert s.queue_depth == 3 and s.counters["admitted"] == 3
+    assert s.pending
+
+
+def test_admission_sheds_beyond_queue_depth():
+    s = sched(max_queue_depth=2)
+    ok = [s.submit(mk(), 0.0) for _ in range(4)]
+    assert ok == [True, True, False, False]
+    assert s.queue_depth == 2 and s.counters["rejected"] == 2
+
+
+def test_shed_request_is_terminal_rejected():
+    s = sched(max_queue_depth=1)
+    s.submit(mk(), 0.0)
+    shed = mk()
+    s.submit(shed, 0.0)
+    assert shed.state == REJECTED and shed.finished
+    assert REJECTED in TERMINAL_STATES
+
+
+def test_resubmission_raises():
+    s = sched()
+    r = mk()
+    s.submit(r, 0.0)
+    with pytest.raises(ValueError, match="resubmitted"):
+        s.submit(r, 1.0)
+    shed_s = sched(max_queue_depth=0)
+    r2 = mk()
+    shed_s.submit(r2, 0.0)
+    with pytest.raises(ValueError, match="resubmitted"):
+        shed_s.submit(r2, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# coalescing: shape keys, FIFO fairness, batch formation triggers
+# ---------------------------------------------------------------------------
+
+def test_idle_engine_fires_partial_batch():
+    # min_batch=4 but nothing else to do -> a singleton fires immediately
+    s = sched(min_batch=4, max_batch=8, max_wait_s=100.0)
+    s.submit(mk(), 0.0)
+    action = s.poll(0.0)
+    assert isinstance(action, Prefill) and action.group.size == 1
+
+
+def test_min_batch_holds_while_decode_work_exists():
+    s = sched(min_batch=4, max_batch=8, max_wait_s=10.0, max_in_flight=2)
+    s.submit(mk(gen_len=5), 0.0)
+    g = run_prefill(s, 0.0)                     # busy group: decode pending
+    for i in range(2):
+        s.submit(mk(), 1.0)
+    action = s.poll(1.0)                        # 2 < min_batch, not waited
+    assert isinstance(action, Decode) and action.group.gid == g.gid
+
+
+def test_max_wait_overrides_min_batch():
+    s = sched(min_batch=4, max_batch=8, max_wait_s=10.0, max_in_flight=2)
+    s.submit(mk(gen_len=5), 0.0)
+    run_prefill(s, 0.0)
+    s.submit(mk(), 1.0)
+    s.submit(mk(), 2.0)
+    action = s.poll(11.0)                       # head waited max_wait_s
+    assert isinstance(action, Prefill) and action.group.size == 2
+
+
+def test_full_batch_fires_and_caps_at_max_batch():
+    s = sched(min_batch=3, max_batch=3, max_wait_s=100.0, max_in_flight=2)
+    s.submit(mk(gen_len=5), 0.0)
+    run_prefill(s, 0.0)                         # keep the engine non-idle
+    for _ in range(5):
+        s.submit(mk(), 1.0)
+    action = s.poll(1.0)
+    assert isinstance(action, Prefill) and action.group.size == 3
+    assert s.queue_depth == 2                   # the overflow stays queued
+
+
+def test_fifo_head_never_overtaken_by_younger_shape():
+    s = sched()
+    s.submit(mk(prompt_len=8), 0.0)             # lone head shape
+    for _ in range(4):
+        s.submit(mk(prompt_len=16), 1.0)        # younger, more popular
+    action = s.poll(2.0)
+    assert isinstance(action, Prefill)
+    assert action.group.prompt_len == 8 and action.group.size == 1
+
+
+def test_same_shape_coriders_join_past_other_shapes():
+    # co-riders join the head's call; the intervening shape is NOT displaced
+    # from the queue, it simply forms the next batch
+    s = sched(max_in_flight=2)
+    a1 = mk(prompt_len=8)
+    b1 = mk(prompt_len=16)
+    a2 = mk(prompt_len=8)
+    for r in (a1, b1, a2):
+        s.submit(r, 0.0)
+    first = s.poll(0.0)
+    assert isinstance(first, Prefill)
+    assert first.group.requests == [a1, a2]     # a2 rode a1's batch
+    assert s.queue_depth == 1
+    s.note_prefill_done(first.group.gid, 0.0)
+    second = s.poll(0.0)
+    assert isinstance(second, Prefill) and second.group.requests == [b1]
+
+
+def test_group_padding_accounting():
+    s = sched(min_batch=1, max_batch=16)
+    for _ in range(11):
+        s.submit(mk(), 0.0)
+    action = s.poll(0.0)
+    g = action.group
+    assert g.size == 11 and g.padded_size == padded_batch(11) == 16
+    assert g.pad_slots == 5
+    assert s.counters["padded_slots"] == 5
+    assert s.counters["prefill_batches"] == 1
+
+
+# ---------------------------------------------------------------------------
+# interleave policy + in-flight limits
+# ---------------------------------------------------------------------------
+
+def test_prefill_first_prefers_new_work():
+    s = sched(policy="prefill-first", max_in_flight=2)
+    s.submit(mk(gen_len=5), 0.0)
+    run_prefill(s, 0.0)                         # decodable group exists
+    s.submit(mk(), 1.0)
+    assert isinstance(s.poll(1.0), Prefill)
+
+
+def test_decode_first_drains_tokens_first():
+    s = sched(policy="decode-first", max_in_flight=2)
+    s.submit(mk(gen_len=5), 0.0)
+    g = run_prefill(s, 0.0)
+    s.submit(mk(), 1.0)
+    action = s.poll(1.0)
+    assert isinstance(action, Decode) and action.group.gid == g.gid
+
+
+def test_max_in_flight_blocks_batch_formation():
+    s = sched(max_in_flight=1)
+    s.submit(mk(gen_len=5), 0.0)
+    g = run_prefill(s, 0.0)
+    s.submit(mk(), 1.0)
+    # the queued request must wait: the one slot is occupied by g
+    action = s.poll(1.0)
+    assert isinstance(action, Decode) and action.group.gid == g.gid
+    assert s.queue_depth == 1 and s.in_flight == 1
+    # draining g frees the slot
+    while g.state != "done":
+        s.note_decode_done(g.gid, 2.0)
+    assert isinstance(s.poll(3.0), Prefill)
+
+
+def test_decode_fifo_over_groups():
+    s = sched(max_in_flight=3)
+    s.submit(mk(prompt_len=8, gen_len=5), 0.0)
+    g0 = run_prefill(s, 0.0)
+    s.submit(mk(prompt_len=16, gen_len=5), 1.0)
+    g1 = run_prefill(s, 1.0)
+    assert g1.gid > g0.gid
+    action = s.poll(2.0)
+    assert isinstance(action, Decode) and action.group.gid == g0.gid
+    # drain g0 -> g1 becomes the oldest decodable
+    while g0.state != "done":
+        s.note_decode_done(g0.gid, 2.0)
+    action = s.poll(3.0)
+    assert isinstance(action, Decode) and action.group.gid == g1.gid
+
+
+def test_poll_empty_returns_none():
+    s = sched()
+    assert s.poll(0.0) is None and not s.pending
+
+
+# ---------------------------------------------------------------------------
+# lifecycle: completion, early exit, decode accounting
+# ---------------------------------------------------------------------------
+
+def test_gen_len_one_finishes_at_prefill():
+    s = sched()
+    r = mk(gen_len=1)
+    s.submit(r, 0.0)
+    action = s.poll(1.0)
+    done = s.note_prefill_done(action.group.gid, 2.0)
+    assert done == [r] and r.state == DONE
+    assert r.first_token_s == 2.0 and r.finish_s == 2.0 and r.ttft_s == 2.0
+    assert action.group.state == "done"
+    assert s.counters["completed"] == 1 and not s.pending
+    assert s.completed == [r]
+
+
+def test_mixed_gen_len_early_exit_and_drain():
+    s = sched(max_batch=8)
+    rs = [mk(gen_len=g) for g in (1, 2, 4)]
+    for r in rs:
+        s.submit(r, 0.0)
+    g = s.poll(0.0).group
+    assert g.max_gen == 4 and g.remaining_steps == 3
+    done = s.note_prefill_done(g.gid, 1.0)
+    assert done == [rs[0]]                      # gen_len=1 exits at prefill
+    assert s.note_decode_done(g.gid, 2.0) == [rs[1]]
+    assert s.note_decode_done(g.gid, 3.0) == []
+    assert s.note_decode_done(g.gid, 4.0) == [rs[2]]
+    assert g.state == "done" and g.steps_done == 3
+    assert [r.state for r in rs] == [DONE, DONE, DONE]
+    assert s.counters["decode_steps"] == 3
+    assert s.completed == rs                    # completion order == exits
+
+
+def test_group_drains_when_all_members_exit_early():
+    # remaining_steps > 0 but nobody is active -> no wasted decode steps
+    s = sched()
+    a, b = mk(gen_len=2), mk(gen_len=2)
+    s.submit(a, 0.0)
+    s.submit(b, 0.0)
+    g = s.poll(0.0).group
+    s.note_prefill_done(g.gid, 0.0)
+    assert s.note_decode_done(g.gid, 1.0) == [a, b]
+    assert g.state == "done" and s.poll(2.0) is None
+
+
+def test_completion_callbacks_validate_group_state():
+    s = sched()
+    s.submit(mk(gen_len=3), 0.0)
+    g = s.poll(0.0).group
+    with pytest.raises(ValueError, match="not decoding"):
+        s.note_decode_done(g.gid, 0.0)
+    s.note_prefill_done(g.gid, 0.0)
+    with pytest.raises(ValueError, match="not awaiting prefill"):
+        s.note_prefill_done(g.gid, 1.0)
+
+
+def test_single_request_lifecycle_latency_contract():
+    s = sched()
+    r = mk(gen_len=3, now=1.0)
+    s.submit(r, 2.0)
+    g = s.poll(5.0).group
+    assert r.state == ACTIVE and r.prefill_start_s == 5.0
+    assert r.queue_wait_s == 3.0
+    s.note_prefill_done(g.gid, 6.0)
+    assert r.ttft_s == 5.0                      # first token - arrival
+    s.note_decode_done(g.gid, 7.0)
+    s.note_decode_done(g.gid, 8.0)
+    assert r.state == DONE and r.e2e_s == 7.0
+
+
+# ---------------------------------------------------------------------------
+# deadlines
+# ---------------------------------------------------------------------------
+
+def test_queued_deadline_eviction_on_poll():
+    s = sched()
+    stale = mk(deadline_s=5.0)
+    fresh = mk(deadline_s=50.0)
+    s.submit(stale, 0.0)
+    s.submit(fresh, 0.0)
+    action = s.poll(10.0)                       # stale expired while queued
+    assert stale.state == EVICTED and stale.finish_s == 10.0
+    assert isinstance(action, Prefill) and action.group.requests == [fresh]
+    assert s.counters["evicted"] == 1
+    assert stale not in s.completed             # evictions are not completions
+
+
+def test_active_deadline_eviction_at_step_boundary():
+    s = sched()
+    doomed = mk(gen_len=10, deadline_s=2.0)
+    rider = mk(gen_len=3)
+    s.submit(doomed, 0.0)
+    s.submit(rider, 0.0)
+    g = s.poll(0.0).group
+    s.note_prefill_done(g.gid, 1.0)
+    done = s.note_decode_done(g.gid, 5.0)       # past doomed's deadline
+    assert done == []                           # evictions aren't returned
+    assert doomed.state == EVICTED and doomed in g.requests
+    assert g.active_requests == [rider]         # the group keeps stepping
+    assert s.note_decode_done(g.gid, 6.0) == [rider]
+    assert g.state == "done" and s.counters["evicted"] == 1
+
+
+def test_eviction_of_whole_queue_leaves_scheduler_idle():
+    s = sched()
+    for _ in range(3):
+        s.submit(mk(deadline_s=1.0), 0.0)
+    assert s.poll(2.0) is None
+    assert s.counters["evicted"] == 3 and not s.pending
+
+
+# ---------------------------------------------------------------------------
+# introspection invariants
+# ---------------------------------------------------------------------------
+
+def test_counters_and_gauges_track_a_full_run():
+    s = sched(max_queue_depth=3, max_in_flight=2)
+    for _ in range(4):
+        s.submit(mk(gen_len=2), 0.0)            # 4th is shed
+    assert s.counters == {
+        "admitted": 3, "rejected": 1, "evicted": 0, "completed": 0,
+        "prefill_batches": 0, "decode_steps": 0, "padded_slots": 0}
+    g = s.poll(0.0).group
+    assert s.in_flight == 1 and s.active_requests == 3
+    s.note_prefill_done(g.gid, 1.0)
+    s.note_decode_done(g.gid, 2.0)
+    assert s.counters["completed"] == 3 and s.in_flight == 0
+    assert not s.pending and s.group(g.gid) is g
+
+
+def test_group_remaining_steps_floor_at_zero():
+    g = Group(gid=0, requests=[], prompt_len=8, max_gen=1, padded_size=1,
+              formed_s=0.0)
+    assert g.remaining_steps == 0
+    g.steps_done = 5
+    assert g.remaining_steps == 0
+
+
+# ---------------------------------------------------------------------------
+# the policy layer stays JAX-free (and numpy-free)
+# ---------------------------------------------------------------------------
+
+def test_policy_modules_import_no_array_library():
+    import repro.serve as serve_pkg
+    pkg_dir = pathlib.Path(serve_pkg.__file__).parent
+    for name in ("__init__.py", "scheduler.py", "session.py"):
+        src = (pkg_dir / name).read_text()
+        for banned in ("import jax", "import numpy"):
+            assert banned not in src, f"{name} must stay array-free"
+
+
+def test_serve_package_import_pulls_no_jax():
+    # fresh interpreter: importing the policy package must not load jax
+    code = ("import sys; import repro.serve; "
+            "assert 'jax' not in sys.modules, 'repro.serve imported jax'; "
+            "assert 'numpy' not in sys.modules")
+    subprocess.run([sys.executable, "-c", code], check=True,
+                   cwd=str(pathlib.Path(__file__).resolve().parent.parent),
+                   env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})

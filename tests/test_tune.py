@@ -497,3 +497,79 @@ def test_cache_stats_reset(tmp_path):
     assert cache.stats.lookups == 0 and cache.stats.hit_rate == 0.0
     cache.lookup("k")                      # a fresh measurement window
     assert cache.stats.hits == 1 and cache.stats.lookups == 1
+
+
+# ---------------------------------------------------------------------------
+# prewarm: the serving warm-pool bulk-install path
+# ---------------------------------------------------------------------------
+
+def _tuned_record(features, **kw):
+    from repro.tune import make_record
+    defaults = dict(dtype=np.float32, n_cols=8, backend="jnp", r_frac=0.5,
+                    t_vpu=4, t_mxu=6, br=8)
+    defaults.update(kw)
+    return make_record(features, **defaults)
+
+
+def test_prewarm_counts_each_new_key_exactly_once(tmp_path):
+    from repro.tune.fingerprint import cache_key_from_features
+    cache = PlanCache(str(tmp_path))
+    recs = [_tuned_record([1.0, 2.0]), _tuned_record([3.0, 4.0])]
+    assert cache.prewarm(recs) == 2
+    assert cache.stats.prewarmed == 2
+    # re-prewarming the same set is a no-op that counts ZERO...
+    before = (tmp_path / "plans.json").stat().st_mtime_ns
+    assert cache.prewarm(recs) == 0
+    assert cache.stats.prewarmed == 2
+    # ...and never touches disk (one atomic save on install, none on no-op)
+    assert (tmp_path / "plans.json").stat().st_mtime_ns == before
+    # a partially-fresh batch counts only the newcomers
+    assert cache.prewarm(recs + [_tuned_record([5.0, 6.0])]) == 1
+    assert cache.stats.prewarmed == 3
+    # installed records are served as plain hits under their rebuilt key
+    key = cache_key_from_features([1.0, 2.0], n_cols=8, dtype=np.float32,
+                                  backend="jnp")
+    assert cache.get(key)["plan"]["t_mxu"] == 6
+
+
+def test_prewarm_keys_match_cache_key_of_source_matrix(tmp_path):
+    """A record tuned via the normal put(cache_key(...)) path and the same
+    record bulk-installed via prewarm land under ONE key — the warm pool
+    actually front-loads the hits the tuner would have minted."""
+    cache = PlanCache(str(tmp_path))
+    fp = fingerprint(csr_from_dense(_dense(2, 64, 48, 0.2)))
+    key = cache_key(fp, n_cols=8, dtype=np.float32, backend="jnp")
+    rec = _tuned_record(fp.features())
+    cache.put(key, rec)
+    pool = PlanCache(str(tmp_path / "pool"))
+    assert pool.prewarm([rec]) == 1
+    assert pool.peek(key) is not None      # rebuilt key == minted key
+    assert pool.get(key)["fingerprint"] == rec["fingerprint"]
+
+
+def test_prewarm_accepts_explicit_key_mapping(tmp_path):
+    cache = PlanCache(str(tmp_path))
+    assert cache.prewarm({"a": {"plan": 1}, "b": {"plan": 2}}) == 2
+    cache.put("c", {"plan": 3})
+    # mapping form skips present keys too, whoever installed them
+    assert cache.prewarm({"b": {"plan": 9}, "c": {"plan": 9},
+                          "d": {"plan": 4}}) == 1
+    assert cache.peek("b")["plan"] == 2    # prewarm never overwrites
+    assert cache.stats.prewarmed == 3
+    # a fresh instance reads everything back (the one save was real)
+    assert PlanCache(str(tmp_path)).peek("d")["plan"] == 4
+
+
+def test_prewarm_survives_round_trip_through_disk(tmp_path):
+    """serve.py's flow: tune into one cache, prewarm a pool from the tuned
+    records, reload the pool in a fresh process."""
+    tuned = PlanCache(str(tmp_path / "tuned"))
+    fp = fingerprint(csr_from_dense(_dense(3, 48, 32, 0.3)))
+    key = cache_key(fp, n_cols=8, dtype=np.float32, backend="jnp")
+    tuned.put(key, _tuned_record(fp.features()))
+    pool = PlanCache(str(tmp_path / "pool"))
+    pool.prewarm([tuned.peek(key)])
+    fresh = PlanCache(str(tmp_path / "pool"))
+    assert fresh.get(key) is not None and fresh.stats.hits == 1
+    # and the stats line surfaces the prewarm count
+    assert "prewarmed=1" in str(pool.stats)

@@ -11,6 +11,9 @@ are reconstructed) — and prints:
   * per-``(part, op)`` engine dispatch counters and grid-step totals,
   * every latency histogram with count / p50 / p90 / p99,
   * tuner plan-cache hit rate (``tune.cache.*`` gauges, per watched cache),
+  * serving section — the continuous-batching queue's admission/latency
+    surface: ``serve.queue_depth`` gauge, request/reject/evict counters,
+    and ``serve.request_us`` / ``serve.ttft_us`` p50/p99,
   * throughput gauges (``serve.tokens_per_s``, ``train.steps_per_s``, ...).
 
   * degradations — every resilience counter the run recorded
@@ -21,7 +24,10 @@ are reconstructed) — and prints:
 Exit codes: 0 on a rendered report, 2 on an empty capture, 1 on an
 unreadable/invalid file.  ``--require-dispatch`` additionally exits 3 when
 the capture holds no nonzero ``engine.dispatch`` counter — CI uses this to
-assert the serve smoke run actually exercised the kernel engine.
+assert the serve smoke run actually exercised the kernel engine —
+and ``--require-serving`` exits 3 when it holds no nonzero
+``serve.requests`` counter (the serving-CI analogue: a batching capture
+need not touch the sparse engine at all).
 ``--fail-on-degraded`` exits 4 when ANY degradation counter is nonzero
 (the normal CI path asserts a clean run); ``--require-degraded METRIC``
 (repeatable) exits 5 unless that degradation metric is nonzero (the chaos
@@ -182,6 +188,34 @@ def report(records: List[Dict], *, top: int = 10,
                 f"misses={int(row.get('misses', 0))} "
                 f"hit_rate={row.get('hit_rate', 0.0):.2f}")
 
+    # Serving: the continuous-batching queue's admission / latency surface
+    # (docs/serving.md).  Counters roll up across sources; the queue-depth
+    # and in-flight gauges report the last captured value per source.
+    serve_ctr = defaultdict(float)
+    for c in counters:
+        if c.get("metric", "").startswith("serve.") \
+                and c.get("metric") not in DEGRADATION_METRICS:
+            serve_ctr[c["metric"]] += float(c.get("value", 0))
+    serve_gauge = {g["metric"]: float(g.get("value", 0.0)) for g in gauges
+                   if g.get("metric") in ("serve.queue_depth",
+                                          "serve.in_flight")}
+    serve_hist = [h for h in hists
+                  if h.get("metric") in ("serve.request_us",
+                                         "serve.ttft_us")]
+    if serve_ctr or serve_gauge or serve_hist:
+        out("\nserving (continuous-batching queue):")
+        for m in ("serve.requests", "serve.rejected", "serve.evicted",
+                  "serve.prefill_calls", "serve.decode_calls",
+                  "serve.tokens_generated"):
+            if m in serve_ctr:
+                out(f"  {m:<28} {int(serve_ctr[m]):>8}")
+        for m, v in sorted(serve_gauge.items()):
+            out(f"  {m:<28} {int(v):>8}")
+        for h in serve_hist:
+            out(f"  {h['metric']:<28} count={int(h.get('count', 0)):>5} "
+                f"p50={_fmt_us(float(h.get('p50', 0))).strip()} "
+                f"p99={_fmt_us(float(h.get('p99', 0))).strip()}")
+
     thr = [g for g in gauges
            if g.get("metric", "").endswith(("_per_s", "tokens_per_s"))]
     if thr:
@@ -216,6 +250,7 @@ def report(records: List[Dict], *, top: int = 10,
     n_degraded = sum(v for v in degraded.values() if v > 0)
 
     return {"spans": len(spans), "dispatches": n_disp,
+            "served": int(serve_ctr.get("serve.requests", 0)),
             "degraded": dict(degraded), "n_degraded": int(n_degraded)}
 
 
@@ -229,6 +264,11 @@ def main(argv=None) -> int:
     ap.add_argument("--require-dispatch", action="store_true",
                     help="exit 3 unless a nonzero engine.dispatch counter "
                          "is present (CI smoke gate)")
+    ap.add_argument("--require-serving", action="store_true",
+                    help="exit 3 unless a nonzero serve.requests counter is "
+                         "present (serving-CI smoke gate; serving captures "
+                         "need not touch the sparse engine, so this is "
+                         "their analogue of --require-dispatch)")
     ap.add_argument("--fail-on-degraded", action="store_true",
                     help="exit 4 if ANY degradation counter is nonzero "
                          "(normal-path CI gate)")
@@ -250,6 +290,10 @@ def main(argv=None) -> int:
     if args.require_dispatch and stats["dispatches"] <= 0:
         print("obs_report: no nonzero engine.dispatch counters "
               "(--require-dispatch)", file=sys.stderr)
+        return 3
+    if args.require_serving and stats["served"] <= 0:
+        print("obs_report: no nonzero serve.requests counter "
+              "(--require-serving)", file=sys.stderr)
         return 3
     if args.fail_on_degraded and stats["n_degraded"] > 0:
         print(f"obs_report: degradations recorded "
