@@ -55,7 +55,7 @@ import sys
 import traceback
 
 DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "results",
-                                "BENCH_006.json")
+                                "BENCH_010.json")
 
 
 def _suite_registry():

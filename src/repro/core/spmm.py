@@ -36,6 +36,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..kernels import engine, ref
+from ..kernels.panel_common import default_bn
 from ..resilience import fallback as _resilience
 from . import partition
 from .formats import (CSR, DEFAULT_PANEL_G, HALF_PACKED_ROWS, LoopsFormat,
@@ -56,6 +57,8 @@ class SpmmPlan:
     t_mxu: int      # paper: t_sme  — workers for the BCSR part
     br: int         # tile height (cntd / cntf / cnth analogue)
     panel_g: int = DEFAULT_PANEL_G  # panel width (Fig. 2 multi-tile count)
+    pipeline_depth: int = 1  # kernel software-pipeline depth (1 = serial)
+    macro_m: int = 1         # same-row panels fused per grid step
 
 
 def default_br(dtype) -> int:
@@ -75,7 +78,8 @@ def plan_and_convert(csr: CSR, *, total_workers: int = 8,
                      tp_vpu: float = 1.0, tp_mxu: float = 4.0,
                      br: int | None = None, panel_g: int | None = None,
                      paper_literal: bool = False,
-                     tuner=None, validate: str | None = "strict"
+                     tuner=None, validate: str | None = "strict",
+                     pipeline_depth: int = 1, macro_m: int = 1
                      ) -> tuple[LoopsFormat, SpmmPlan]:
     """Pick (t_vpu, t_mxu) via the perf model, solve Eq. 1, run Algorithm 1.
 
@@ -112,8 +116,11 @@ def plan_and_convert(csr: CSR, *, total_workers: int = 8,
     r_b = partition.choose_r_boundary(
         csr.nrows, tp_vpu, tp_mxu, t_vpu, t_mxu, br=br,
         paper_literal=paper_literal)
-    return loops_from_csr(csr, r_b, br, panel_g=panel_g), SpmmPlan(
-        r_boundary=r_b, t_vpu=t_vpu, t_mxu=t_mxu, br=br, panel_g=panel_g)
+    fmt = loops_from_csr(csr, r_b, br, panel_g=panel_g,
+                         macro_m=macro_m, pipeline_depth=pipeline_depth)
+    return fmt, SpmmPlan(
+        r_boundary=r_b, t_vpu=t_vpu, t_mxu=t_mxu, br=br, panel_g=panel_g,
+        pipeline_depth=pipeline_depth, macro_m=macro_m)
 
 
 def _loops_execute(fmt: LoopsFormat, b: jax.Array, backend: str, bn,
@@ -129,12 +136,14 @@ def _loops_execute(fmt: LoopsFormat, b: jax.Array, backend: str, bn,
     has_csr = fmt.r_boundary > 0
     has_bcsr = fmt.r_boundary < fmt.nrows
     pallas = backend != "jnp"   # panel views only materialise for Pallas
+    depth = int(getattr(fmt, "pipeline_depth", 1))
     if (has_csr and has_bcsr and pallas
             and fmt.r_boundary % fmt.bcsr_part.br == 0):
         try:
             return engine.loops_spmm_fused(
                 fmt, b, backend=backend, bn=bn, out_dtype=out_dtype,
-                csr_vals=csr_vals, bcsr_vals=bcsr_vals)
+                csr_vals=csr_vals, bcsr_vals=bcsr_vals,
+                pipeline_depth=depth)
         except Exception as e:   # noqa: BLE001 - the parts path IS the handler
             # The fused chain (pallas → interpret) is exhausted: degrade to
             # the two-pass parts path below, whose per-part chains reach the
@@ -149,11 +158,13 @@ def _loops_execute(fmt: LoopsFormat, b: jax.Array, backend: str, bn,
     if has_csr:
         parts.append(engine.csr_spmm(
             fmt.csr_part, b, backend=backend, bn=bn, out_dtype=out_dtype,
-            panels=fmt.csr_panels if pallas else None, vals=csr_vals))
+            panels=fmt.csr_panels if pallas else None, vals=csr_vals,
+            pipeline_depth=depth))
     if has_bcsr:
         parts.append(engine.bcsr_spmm(
             fmt.bcsr_part, b, backend=backend, bn=bn, out_dtype=out_dtype,
-            panels=fmt.bcsr_panels if pallas else None, vals=bcsr_vals))
+            panels=fmt.bcsr_panels if pallas else None, vals=bcsr_vals,
+            pipeline_depth=depth))
     if not parts:
         _, out = engine.resolve_dtypes(fmt.csr_part.vals.dtype, out_dtype)
         return jnp.zeros(b.shape[:-2] + (fmt.nrows, b.shape[-1]), out)
@@ -329,7 +340,9 @@ def loops_spmm_values(fmt: LoopsFormat, csr_vals: jax.Array,
         cv, bv, b_ = res
         db = _backward_db(fmt, dy, backend, bn, transpose_plan,
                           csr_vals=cv, bcsr_vals=bv)
-        d_cv, d_bv = engine.loops_sdd(fmt, dy, b_, backend=backend, bn=bn)
+        d_cv, d_bv = engine.loops_sdd(
+            fmt, dy, b_, backend=backend, bn=bn,
+            pipeline_depth=int(getattr(fmt, "pipeline_depth", 1)))
         return (d_cv.astype(cv.dtype), d_bv.astype(bv.dtype),
                 db.astype(b_.dtype))
 
@@ -345,10 +358,14 @@ def loops_grid_steps(fmt: LoopsFormat, n_cols: int,
     With G-wide panels the inner grid walks panels, not nonzeros, so the
     count drops from ``(nnz_csr + ntiles) * col_blocks`` at G=1 towards a
     ``~G``-fold reduction (padding at row/block-row boundaries is the gap
-    from the ideal).
+    from the ideal).  ``macro_m > 1`` widens the effective panels (the
+    cached panel views are built at ``panel_g_eff``), shrinking the count
+    a further ``~macro_m``-fold; ``pipeline_depth = d`` adds ``d - 1``
+    fill/drain ramp steps per *executed* (non-empty) part.
     """
-    bn = bn or min(n_cols, 512)
+    bn = bn or default_bn(n_cols)
     col_blocks = -(-n_cols // bn)
+    depth = max(int(getattr(fmt, "pipeline_depth", 1)), 1)
     p_csr = fmt.csr_panels.npanels
     p_bcsr = fmt.bcsr_panels.npanels
     # A part that loops_spmm skips contributes nothing — the empty BCSR part
@@ -358,7 +375,11 @@ def loops_grid_steps(fmt: LoopsFormat, n_cols: int,
         p_csr = 0
     if fmt.r_boundary == fmt.nrows:
         p_bcsr = 0
-    return (p_csr + p_bcsr) * col_blocks
+    steps = 0
+    for p in (p_csr, p_bcsr):
+        if p > 0:
+            steps += (p + depth - 1) * col_blocks
+    return steps
 
 
 def loops_batched_grid_steps(fmt: LoopsFormat, batch, n_cols: int,

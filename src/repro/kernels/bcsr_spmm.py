@@ -57,7 +57,8 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from .engine import batch_block, register_kernel, resolve_dtypes
-from .panel_common import (first_last, grid_dims, panel_operands,
+from .panel_common import (check_pipeline_depth, default_bn, first_last,
+                           first_last_at, grid_dims, panel_operands, parity,
                            split_panel_refs)
 
 __all__ = ["bcsr_spmm_pallas", "bcsr_panels_spmm_pallas"]
@@ -107,10 +108,72 @@ def _panel_kernel(g: int, has_carry: bool, bz: int | None, *refs):
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
+def _piped_panel_kernel(g: int, has_carry: bool, bz: int | None, depth: int,
+                        *refs):
+    """Depth-2 software pipeline: grid step ``k`` assembles panel
+    ``min(k, P-1)``'s B rows into ping-pong scratch slot ``k % 2`` while the
+    MXU contracts panel ``max(k - 1, 0)`` out of slot ``(k+1) % 2`` — the
+    gather DMAs of the next panel overlap this panel's ``(Br,G)@(G,bn)``
+    contraction.  Compute/init/flush are predicated off during the
+    ``depth - 1`` fill ramp steps."""
+    rows_ref, _, vals_ref, mask_ref, b_refs, (o_ref, bpan_ref, acc_ref) = \
+        split_panel_refs(refs, g, has_carry)
+    axis = 1 if bz is None else 2
+    k = pl.program_id(axis)
+    npanels = pl.num_programs(axis) - (depth - 1)
+
+    def _assemble(slot):
+        for i, b_ref in enumerate(b_refs):
+            if bz is None:
+                row = b_ref[...].astype(bpan_ref.dtype)          # (1, bn)
+                bpan_ref[slot, i, :] = jnp.where(
+                    mask_ref[0, i] > 0, row, jnp.zeros_like(row))[0]
+            else:
+                row = b_ref[...][:, 0, :].astype(bpan_ref.dtype)  # (bz, bn)
+                bpan_ref[slot, :, i, :] = jnp.where(
+                    mask_ref[0, i] > 0, row, jnp.zeros_like(row))
+
+    for s in (0, 1):
+        @pl.when(parity(k) == s)
+        def _(s=s):
+            _assemble(s)
+
+    @pl.when(k >= depth - 1)
+    def _compute():
+        c = jnp.maximum(k - (depth - 1), 0)
+        first, last = first_last_at(rows_ref, c, npanels)
+
+        @pl.when(first)
+        def _init():
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        a_panel = vals_ref[0]        # (Br, G), panel c's values
+
+        def _contract(slot):
+            if bz is None:
+                acc_ref[...] += jax.lax.dot_general(
+                    a_panel, bpan_ref[slot], (((1,), (0,)), ((), ())),
+                    preferred_element_type=acc_ref.dtype)
+            else:
+                a_b = jnp.broadcast_to(a_panel, (bz,) + a_panel.shape)
+                acc_ref[...] += jax.lax.dot_general(
+                    a_b, bpan_ref[slot], (((2,), (1,)), ((0,), (0,))),
+                    preferred_element_type=acc_ref.dtype)
+
+        for s in (0, 1):
+            @pl.when(parity(k + 1) == s)
+            def _(s=s):
+                _contract(s)
+
+        @pl.when(last)
+        def _flush():
+            o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("nblocks", "row_block_offset", "out_rows", "bn",
-                     "out_dtype", "interpret"))
+                     "out_dtype", "interpret", "pipeline_depth"))
 def bcsr_panels_spmm_pallas(panel_rows: jax.Array, panel_cols: jax.Array,
                             panel_vals: jax.Array, panel_mask: jax.Array,
                             b: jax.Array, *, nblocks: int,
@@ -118,7 +181,8 @@ def bcsr_panels_spmm_pallas(panel_rows: jax.Array, panel_cols: jax.Array,
                             out_rows: int | None = None,
                             bn: int | None = None, out_dtype=None,
                             interpret: bool = True,
-                            carry: jax.Array | None = None) -> jax.Array:
+                            carry: jax.Array | None = None,
+                            pipeline_depth: int = 1) -> jax.Array:
     """Panelized vector-wise BCSR SpMM.
 
     Args:
@@ -134,16 +198,23 @@ def bcsr_panels_spmm_pallas(panel_rows: jax.Array, panel_cols: jax.Array,
       out_rows:   total rows of the returned array; defaults to
                   ``(row_block_offset + nblocks) * Br``.
       bn:         B/accumulator column width per visit (multi-ZA-tile
-                  factor); defaults to min(N, 512) = 4 lane tiles.
+                  factor); defaults to ``panel_common.default_bn(N)`` —
+                  min(N, 512) when 512 | N, else the largest lane-aligned
+                  divisor (N=600 -> 200).
       carry:      optional (..., out_rows, N) array aliased into the output;
                   rows not visited here keep its contents (fused mode).
+      pipeline_depth: 1 (serial gather->contract, default) or 2 (double-
+                  buffered B-panel prefetch through a ping-pong scratch
+                  slot).  Unbatched results are bitwise identical across
+                  depths; batched results agree to ~1 ulp.
     """
     if b.ndim not in (2, 3):
         raise ValueError(f"b must be (K, N) or (batch, K, N); got rank "
                          f"{b.ndim}")
+    depth = check_pipeline_depth(pipeline_depth)
     npanels, br, g = panel_vals.shape
     n = b.shape[-1]
-    bn = bn or min(n, 512)
+    bn = bn or default_bn(n)
     if n % bn:
         raise ValueError(f"N={n} not divisible by bn={bn}")
     acc_dtype, out_dtype = resolve_dtypes(panel_vals.dtype, out_dtype)
@@ -151,7 +222,8 @@ def bcsr_panels_spmm_pallas(panel_rows: jax.Array, panel_cols: jax.Array,
     has_carry = carry is not None
     batch = b.shape[0] if b.ndim == 3 else None
     bz = batch_block(batch) if batch is not None else 0
-    grid, _ = grid_dims(batch=batch, bz=bz, n=n, bn=bn, npanels=npanels)
+    grid, _ = grid_dims(batch=batch, bz=bz, n=n, bn=bn, npanels=npanels,
+                        pipeline_depth=depth)
 
     def _rows(rows, k, j):
         return (row_block_offset + rows[k], j)
@@ -159,21 +231,38 @@ def bcsr_panels_spmm_pallas(panel_rows: jax.Array, panel_cols: jax.Array,
     in_specs, args, aliases = panel_operands(
         g=g, bn=bn, vals_block=(1, br, g), vals=panel_vals, mask=panel_mask,
         b=b, carry=carry, carry_block=(br, bn), row_map=_rows,
-        bz=None if batch is None else bz)
+        bz=None if batch is None else bz, pipeline_depth=depth,
+        npanels=npanels)
+
+    if depth == 1:
+        def _out_k(k):
+            return k
+    else:
+        def _out_k(k):
+            return jnp.maximum(k - (depth - 1), 0)
 
     if batch is None:
-        out_specs = pl.BlockSpec((br, bn),
-                                 lambda j, k, rows, cols: _rows(rows, k, j))
+        out_specs = pl.BlockSpec(
+            (br, bn), lambda j, k, rows, cols: _rows(rows, _out_k(k), j))
         out_shape = jax.ShapeDtypeStruct((out_rows, n), out_dtype)
-        scratch = [pltpu.VMEM((g, bn), b.dtype),        # B panel
+        bpan_shape = (g, bn) if depth == 1 else (depth, g, bn)
+        scratch = [pltpu.VMEM(bpan_shape, b.dtype),     # B panel (packed)
                    pltpu.VMEM((br, bn), acc_dtype)]     # accumulator
     else:
         out_specs = pl.BlockSpec(
             (bz, br, bn),
-            lambda z, j, k, rows, cols: (z,) + _rows(rows, k, j))
+            lambda z, j, k, rows, cols: (z,) + _rows(rows, _out_k(k), j))
         out_shape = jax.ShapeDtypeStruct((batch, out_rows, n), out_dtype)
-        scratch = [pltpu.VMEM((bz, g, bn), b.dtype),    # B panels
+        bpan_shape = (bz, g, bn) if depth == 1 else (depth, bz, g, bn)
+        scratch = [pltpu.VMEM(bpan_shape, b.dtype),     # B panels (packed)
                    pltpu.VMEM((bz, br, bn), acc_dtype)]
+
+    if depth > 1:
+        kernel = functools.partial(_piped_panel_kernel, g, has_carry,
+                                   None if batch is None else bz, depth)
+    else:
+        kernel = functools.partial(_panel_kernel, g, has_carry,
+                                   None if batch is None else bz)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,  # panel_rows, panel_cols
@@ -183,8 +272,7 @@ def bcsr_panels_spmm_pallas(panel_rows: jax.Array, panel_cols: jax.Array,
         scratch_shapes=scratch,
     )
     return pl.pallas_call(
-        functools.partial(_panel_kernel, g, has_carry,
-                          None if batch is None else bz),
+        kernel,
         grid_spec=grid_spec,
         out_shape=out_shape,
         input_output_aliases=aliases,

@@ -60,7 +60,8 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from .engine import batch_block, register_kernel, resolve_dtypes
-from .panel_common import (first_last, grid_dims, panel_operands,
+from .panel_common import (check_pipeline_depth, default_bn, first_last,
+                           first_last_at, grid_dims, panel_operands, parity,
                            split_panel_refs)
 
 __all__ = ["csr_spmm_pallas", "csr_panels_spmm_pallas"]
@@ -81,12 +82,15 @@ def _panel_kernel(g: int, has_carry: bool, bz: int | None, *refs):
     # Masked broadcast-multiply-reduce over the G axis: lane i contributes
     # vals[i] * B[cols[i], :] iff mask[i] (padding lanes are dropped by the
     # mask, so panels shorter than G — nnz not divisible by G, row
-    # boundaries — are exact, not approximate).
+    # boundaries — are exact, not approximate).  B's rows stay packed in
+    # their storage dtype; only the multiply promotes (bf16 -> f32 is exact,
+    # so half-precision panels cost half the VMEM traffic at identical
+    # results).
     acc = acc_ref[...]
     for i, b_ref in enumerate(b_refs):
         v = vals_ref[0, i].astype(acc_ref.dtype)
         row = b_ref[...] if bz is None else b_ref[...][:, 0, :]
-        contrib = v * row.astype(acc_ref.dtype)  # AXPY over N lanes
+        contrib = v * row  # AXPY over N lanes; promotion at the multiply
         acc = acc + jnp.where(mask_ref[0, i] > 0, contrib,
                               jnp.zeros_like(contrib))
     acc_ref[...] = acc
@@ -98,15 +102,80 @@ def _panel_kernel(g: int, has_carry: bool, bz: int | None, *refs):
             o_ref.dtype)
 
 
+def _piped_panel_kernel(g: int, has_carry: bool, bz: int | None, depth: int,
+                        *refs):
+    """Depth-2 software pipeline: grid step ``k`` assembles panel
+    ``min(k, P-1)``'s (masked) B rows into ping-pong scratch slot ``k % 2``
+    while contracting panel ``max(k - 1, 0)`` out of slot ``(k+1) % 2`` —
+    the B gathers of the next panel overlap the AXPY of the current one.
+    The grid carries ``depth - 1`` extra fill/drain ramp steps; compute,
+    init and flush are predicated off during the fill ramp."""
+    rows_ref, _, vals_ref, mask_ref, b_refs, \
+        (o_ref, bpan_ref, mpan_ref, acc_ref) = \
+        split_panel_refs(refs, g, has_carry)
+    axis = 1 if bz is None else 2
+    k = pl.program_id(axis)
+    npanels = pl.num_programs(axis) - (depth - 1)
+
+    def _assemble(slot):
+        # Stage the raw (packed-dtype) B rows plus the mask panel; the
+        # compute stream applies the mask exactly like the depth-1 kernel
+        # (where AFTER the multiply) so results stay bitwise identical.
+        mpan_ref[slot] = mask_ref[...]
+        for i, b_ref in enumerate(b_refs):
+            if bz is None:
+                bpan_ref[slot, i, :] = b_ref[...][0]
+            else:
+                bpan_ref[slot, i, :, :] = b_ref[...][:, 0, :]
+
+    for s in (0, 1):
+        @pl.when(parity(k) == s)
+        def _(s=s):
+            _assemble(s)
+
+    @pl.when(k >= depth - 1)
+    def _compute():
+        c = jnp.maximum(k - (depth - 1), 0)
+        first, last = first_last_at(rows_ref, c, npanels)
+
+        @pl.when(first)
+        def _init():
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        def _accumulate(slot):
+            acc = acc_ref[...]
+            for i in range(g):
+                v = vals_ref[0, i].astype(acc_ref.dtype)
+                row = (bpan_ref[slot, i, :][None] if bz is None
+                       else bpan_ref[slot, i, :, :])
+                contrib = v * row   # promotion at the multiply (packed B)
+                acc = acc + jnp.where(mpan_ref[slot, 0, i] > 0, contrib,
+                                      jnp.zeros_like(contrib))
+            acc_ref[...] = acc
+
+        for s in (0, 1):
+            @pl.when(parity(k + 1) == s)
+            def _(s=s):
+                _accumulate(s)
+
+        @pl.when(last)
+        def _flush():
+            out = acc_ref[...]
+            o_ref[...] = (out if bz is None else out[:, None, :]).astype(
+                o_ref.dtype)
+
+
 @functools.partial(
     jax.jit,
-    static_argnames=("nrows", "out_rows", "bn", "out_dtype", "interpret"))
+    static_argnames=("nrows", "out_rows", "bn", "out_dtype", "interpret",
+                     "pipeline_depth"))
 def csr_panels_spmm_pallas(panel_rows: jax.Array, panel_cols: jax.Array,
                            panel_vals: jax.Array, panel_mask: jax.Array,
                            b: jax.Array, *, nrows: int,
                            out_rows: int | None = None, bn: int | None = None,
                            out_dtype=None, interpret: bool = True,
-                           carry: jax.Array | None = None) -> jax.Array:
+                           carry: jax.Array | None = None,
+                           pipeline_depth: int = 1) -> jax.Array:
     """C[r] += sum_i mask[p,i] * vals[p,i] * B[cols[p,i], :] per panel p.
 
     Args:
@@ -120,19 +189,29 @@ def csr_panels_spmm_pallas(panel_rows: jax.Array, panel_cols: jax.Array,
       out_rows:   total rows of the returned array (>= nrows; rows beyond
                   ``nrows`` are the fused path's BCSR territory).  Defaults
                   to ``nrows``.
-      bn:         dense-column block width; defaults to min(N, 512) — the wide
-                  block is the column-direction analogue of the paper's
-                  multi-tile trick (several 128-lane tiles per visit).
+      bn:         dense-column block width; defaults to
+                  ``panel_common.default_bn(N)`` (min(N, 512) when 512 | N,
+                  else the largest lane-aligned divisor) — the wide block is
+                  the column-direction analogue of the paper's multi-tile
+                  trick (several 128-lane tiles per visit).
       carry:      optional (..., out_rows, N) array aliased into the output;
                   rows not visited here keep its contents (fused mode).
       interpret:  run the Pallas interpreter (CPU validation); False on TPU.
+      pipeline_depth: 1 (serial gather->contract, default) or 2 (double-
+                  buffered B-panel prefetch: the next panel's rows assemble
+                  into a ping-pong VMEM slot while this panel contracts).
+                  Unbatched results are bitwise identical across depths
+                  (the compute stream replays the depth-1 expression);
+                  batched results agree to ~1 ulp (XLA's multiply-add
+                  contraction differs across the two graphs).
     """
     if b.ndim not in (2, 3):
         raise ValueError(f"b must be (K, N) or (batch, K, N); got rank "
                          f"{b.ndim}")
+    depth = check_pipeline_depth(pipeline_depth)
     npanels, g = panel_cols.shape
     n = b.shape[-1]
-    bn = bn or min(n, 512)
+    bn = bn or default_bn(n)
     if n % bn:
         raise ValueError(f"N={n} not divisible by bn={bn}")
     acc_dtype, out_dtype = resolve_dtypes(panel_vals.dtype, out_dtype)
@@ -140,7 +219,8 @@ def csr_panels_spmm_pallas(panel_rows: jax.Array, panel_cols: jax.Array,
     has_carry = carry is not None
     batch = b.shape[0] if b.ndim == 3 else None
     bz = batch_block(batch) if batch is not None else 0
-    grid, _ = grid_dims(batch=batch, bz=bz, n=n, bn=bn, npanels=npanels)
+    grid, _ = grid_dims(batch=batch, bz=bz, n=n, bn=bn, npanels=npanels,
+                        pipeline_depth=depth)
 
     def _rows(rows, k, j):
         return (rows[k], j)
@@ -148,30 +228,53 @@ def csr_panels_spmm_pallas(panel_rows: jax.Array, panel_cols: jax.Array,
     in_specs, args, aliases = panel_operands(
         g=g, bn=bn, vals_block=(1, g), vals=panel_vals, mask=panel_mask,
         b=b, carry=carry, carry_block=(1, bn), row_map=_rows,
-        bz=None if batch is None else bz)
+        bz=None if batch is None else bz, pipeline_depth=depth,
+        npanels=npanels)
+
+    if depth == 1:
+        def _out_k(k):
+            return k
+    else:
+        def _out_k(k):
+            return jnp.maximum(k - (depth - 1), 0)
 
     if batch is None:
-        out_specs = pl.BlockSpec((1, bn),
-                                 lambda j, k, rows, cols: _rows(rows, k, j))
+        out_specs = pl.BlockSpec(
+            (1, bn), lambda j, k, rows, cols: _rows(rows, _out_k(k), j))
         out_shape = jax.ShapeDtypeStruct((out_rows, n), out_dtype)
         acc_shape = (1, bn)
+        bpan_shape = (depth, g, bn)
     else:
         out_specs = pl.BlockSpec(
             (bz, 1, bn),
-            lambda z, j, k, rows, cols: (z,) + _rows(rows, k, j))
+            lambda z, j, k, rows, cols: (z,) + _rows(rows, _out_k(k), j))
         out_shape = jax.ShapeDtypeStruct((batch, out_rows, n), out_dtype)
         acc_shape = (bz, bn)
+        bpan_shape = (depth, g, bz, bn)   # contiguous (bz, bn) row reads
+
+    scratch = [pltpu.VMEM(acc_shape, acc_dtype)]
+    if depth > 1:
+        # Ping-pong B-panel buffer, packed in B's storage dtype (half
+        # precision stays half-width in VMEM; promotion happens at the
+        # multiply against the fp32-resident accumulator), plus the staged
+        # mask panel the compute stream applies one step later.
+        scratch.insert(0, pltpu.VMEM((depth, 1, g), panel_mask.dtype))
+        scratch.insert(0, pltpu.VMEM(bpan_shape, b.dtype))
+        kernel = functools.partial(_piped_panel_kernel, g, has_carry,
+                                   None if batch is None else bz, depth)
+    else:
+        kernel = functools.partial(_panel_kernel, g, has_carry,
+                                   None if batch is None else bz)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,  # panel_rows, panel_cols
         grid=grid,
         in_specs=in_specs,
         out_specs=out_specs,
-        scratch_shapes=[pltpu.VMEM(acc_shape, acc_dtype)],
+        scratch_shapes=scratch,
     )
     return pl.pallas_call(
-        functools.partial(_panel_kernel, g, has_carry,
-                          None if batch is None else bz),
+        kernel,
         grid_spec=grid_spec,
         out_shape=out_shape,
         input_output_aliases=aliases,

@@ -237,6 +237,38 @@ def _note(part: str, op: str, **fields) -> None:
     _TRACER.on_dispatch(part=part, op=op, **fields)
 
 
+def _panel_note_fields(*, part: str, depth: int, npanels: int, nb: int,
+                       n: int, bn: int | None, g: int, br: int,
+                       b_dtype, value_dtype) -> dict:
+    """Pipeline observability fields for a G-wide panel dispatch.
+
+    ``steps`` — grid steps including the ``depth - 1`` fill/drain ramp
+    (× batch groups, matching ``_note``'s default accounting at depth 1);
+    ``scratch_bytes`` — VMEM scratch footprint (accumulator + the packed
+    ping-pong B-panel buffer, which stays in B's storage dtype);
+    ``prefetch_overlap`` — fraction of grid steps whose B-row gathers
+    overlap a contraction (0.0 for the serial depth-1 kernels).
+    """
+    from .panel_common import default_bn
+    groups = max(-(-nb // batch_block(nb)), 1)
+    bz = batch_block(nb)
+    bn_eff = bn or default_bn(n)
+    acc = acc_dtype_for(value_dtype)
+    acc_rows = br if part == "bcsr" else 1
+    scratch = bz * acc_rows * bn_eff * jnp.dtype(acc).itemsize
+    b_item = jnp.dtype(b_dtype).itemsize
+    if part == "bcsr":
+        bpan_elems = max(depth, 1) * g * bn_eff * bz
+    else:   # depth-1 CSR reads gathered B rows directly (no staging buffer)
+        bpan_elems = depth * g * bn_eff * bz if depth > 1 else 0
+    steps = npanels + depth - 1
+    overlap = (max(npanels - 1, 0) / steps) if depth > 1 else 0.0
+    return {"pipeline_depth": depth,
+            "steps": steps * groups,
+            "scratch_bytes": int(scratch + bpan_elems * b_item),
+            "prefetch_overlap": float(overlap)}
+
+
 # ---------------------------------------------------------------------------
 # kernel registry
 # ---------------------------------------------------------------------------
@@ -287,13 +319,15 @@ def panel_values(panels, vals):
 
 def csr_spmm(csr, b: jax.Array, *, backend: str | None = None,
              bn: int | None = None, out_dtype=None, panels=None,
-             vals=None) -> jax.Array:
+             vals=None, pipeline_depth: int = 1) -> jax.Array:
     """SpMM of a ``repro.core.formats.CSR`` against dense ``b`` (..., K, N).
 
     ``panels`` — a ``repro.core.formats.PanelCSR`` view of the same matrix —
     routes the Pallas backends through the G-wide panel kernel.  ``vals`` —
     optional traced (nnz,) values replacing ``csr.vals``.  Leading batch
     dims of ``b`` execute as the kernels' native batch grid dimension.
+    ``pipeline_depth=2`` double-buffers the B-row gathers on the panel
+    kernel (ignored by the flat and jnp paths).
     """
     backend = resolve_backend(backend)
     check_rhs(csr.ncols, b)
@@ -312,18 +346,23 @@ def csr_spmm(csr, b: jax.Array, *, backend: str | None = None,
         interpret = bk == "interpret"
         b3, batch = flatten_batch(b)
         b3p = _pad_flat_batch(b3)
+        nb = int(b3p.shape[0]) if b3p.ndim == 3 else 1
+        depth = int(pipeline_depth) if panels is not None else 1
+        extra = _panel_note_fields(
+            part="csr", depth=depth, npanels=int(panels.npanels), nb=nb,
+            n=int(b.shape[-1]), bn=bn, g=int(panels.g), br=1,
+            b_dtype=b.dtype, value_dtype=v.dtype) if panels is not None else {}
         _note("csr", "spmm", backend=bk,
               impl="panels" if panels is not None else "flat",
               units=int(panels.npanels) if panels is not None
               else int(csr.nnz),
-              batch=int(b3p.shape[0]) if b3p.ndim == 3 else 1,
-              n=int(b.shape[-1]))
+              batch=nb, n=int(b.shape[-1]), **extra)
         if panels is not None:
             out = get_kernel("csr", "spmm", "panels")(
                 jnp.asarray(panels.panel_rows), jnp.asarray(panels.panel_cols),
                 panel_values(panels, vals), jnp.asarray(panels.panel_mask),
                 b3p, nrows=csr.nrows, bn=bn, out_dtype=out_dtype,
-                interpret=interpret)
+                interpret=interpret, pipeline_depth=depth)
         else:
             out = get_kernel("csr", "spmm", "flat")(
                 jnp.asarray(csr.row_ids), jnp.asarray(csr.col_idx), v, b3p,
@@ -338,7 +377,7 @@ def csr_spmm(csr, b: jax.Array, *, backend: str | None = None,
 
 def bcsr_spmm(bcsr, b: jax.Array, *, backend: str | None = None,
               bn: int | None = None, out_dtype=None, panels=None,
-              vals=None) -> jax.Array:
+              vals=None, pipeline_depth: int = 1) -> jax.Array:
     """SpMM of a ``repro.core.formats.VectorBCSR`` against dense ``b``.
 
     Returns the *logical* (..., bcsr.nrows, N) result (padding rows
@@ -364,18 +403,23 @@ def bcsr_spmm(bcsr, b: jax.Array, *, backend: str | None = None,
         interpret = bk == "interpret"
         b3, batch = flatten_batch(b)
         b3p = _pad_flat_batch(b3)
+        nb = int(b3p.shape[0]) if b3p.ndim == 3 else 1
+        depth = int(pipeline_depth) if panels is not None else 1
+        extra = _panel_note_fields(
+            part="bcsr", depth=depth, npanels=int(panels.npanels), nb=nb,
+            n=int(b.shape[-1]), bn=bn, g=int(panels.g), br=int(panels.br),
+            b_dtype=b.dtype, value_dtype=v.dtype) if panels is not None else {}
         _note("bcsr", "spmm", backend=bk,
               impl="panels" if panels is not None else "flat",
               units=int(panels.npanels) if panels is not None
               else int(bcsr.ntiles),
-              batch=int(b3p.shape[0]) if b3p.ndim == 3 else 1,
-              n=int(b.shape[-1]))
+              batch=nb, n=int(b.shape[-1]), **extra)
         if panels is not None:
             padded = get_kernel("bcsr", "spmm", "panels")(
                 jnp.asarray(panels.panel_rows), jnp.asarray(panels.panel_cols),
                 panel_values(panels, vals), jnp.asarray(panels.panel_mask),
                 b3p, nblocks=panels.nblocks, bn=bn, out_dtype=out_dtype,
-                interpret=interpret)
+                interpret=interpret, pipeline_depth=depth)
         else:
             padded = get_kernel("bcsr", "spmm", "flat")(
                 jnp.asarray(bcsr.tile_rows), jnp.asarray(bcsr.tile_cols), v,
@@ -390,7 +434,8 @@ def bcsr_spmm(bcsr, b: jax.Array, *, backend: str | None = None,
 
 def loops_spmm_fused(fmt, b: jax.Array, *, backend: str | None = None,
                      bn: int | None = None, out_dtype=None,
-                     csr_vals=None, bcsr_vals=None) -> jax.Array:
+                     csr_vals=None, bcsr_vals=None,
+                     pipeline_depth: int = 1) -> jax.Array:
     """Single-pass hybrid SpMM into ONE preallocated output.
 
     Pass 1 (CSR panels) allocates the full ``(..., r_boundary + nblocks*Br,
@@ -426,22 +471,32 @@ def loops_spmm_fused(fmt, b: jax.Array, *, backend: str | None = None,
         b3, batch = flatten_batch(b)
         b3p = _pad_flat_batch(b3)
         nb = int(b3p.shape[0]) if b3p.ndim == 3 else 1
+        depth = int(pipeline_depth)
+        vdt = fmt.csr_part.vals.dtype
         _note("csr", "spmm", backend=bk, impl="panels", fused=True,
-              units=int(cp.npanels), batch=nb, n=int(b.shape[-1]))
+              units=int(cp.npanels), batch=nb, n=int(b.shape[-1]),
+              **_panel_note_fields(
+                  part="csr", depth=depth, npanels=int(cp.npanels), nb=nb,
+                  n=int(b.shape[-1]), bn=bn, g=int(cp.g), br=1,
+                  b_dtype=b.dtype, value_dtype=vdt))
         _note("bcsr", "spmm", backend=bk, impl="panels", fused=True,
-              units=int(bp.npanels), batch=nb, n=int(b.shape[-1]))
+              units=int(bp.npanels), batch=nb, n=int(b.shape[-1]),
+              **_panel_note_fields(
+                  part="bcsr", depth=depth, npanels=int(bp.npanels), nb=nb,
+                  n=int(b.shape[-1]), bn=bn, g=int(bp.g), br=int(bp.br),
+                  b_dtype=b.dtype, value_dtype=vdt))
         r_pad = r_b + bp.nblocks * br
         out = get_kernel("csr", "spmm", "panels")(
             jnp.asarray(cp.panel_rows), jnp.asarray(cp.panel_cols),
             panel_values(cp, csr_vals), jnp.asarray(cp.panel_mask),
             b3p, nrows=r_b, out_rows=r_pad, bn=bn, out_dtype=out_dtype,
-            interpret=interpret)
+            interpret=interpret, pipeline_depth=depth)
         out = get_kernel("bcsr", "spmm", "panels")(
             jnp.asarray(bp.panel_rows), jnp.asarray(bp.panel_cols),
             panel_values(bp, bcsr_vals), jnp.asarray(bp.panel_mask),
             b3p, nblocks=bp.nblocks, row_block_offset=r_b // br,
             out_rows=r_pad, bn=bn, out_dtype=out_dtype, interpret=interpret,
-            carry=out)
+            carry=out, pipeline_depth=depth)
         if b3p is not b3:
             out = out[:b3.shape[0]]
         if r_pad != fmt.nrows:
@@ -455,7 +510,8 @@ def loops_spmm_fused(fmt, b: jax.Array, *, backend: str | None = None,
 
 
 def loops_sdd(fmt, dy: jax.Array, b: jax.Array, *,
-              backend: str | None = None, bn: int | None = None):
+              backend: str | None = None, bn: int | None = None,
+              pipeline_depth: int = 1):
     """Gradient of ``Y = A @ B`` w.r.t. A's stored values (both parts).
 
     Args:
@@ -483,21 +539,22 @@ def loops_sdd(fmt, dy: jax.Array, b: jax.Array, *,
         raise ValueError(f"dy batch dims {dy.shape[:-2]} do not match b "
                          f"batch dims {b.shape[:-2]}")
     if backend == "jnp" or _empty_batch(b):
-        return _loops_sdd_impl(fmt, dy, b, backend, bn)
+        return _loops_sdd_impl(fmt, dy, b, backend, bn, pipeline_depth)
 
     def attempt(bk: str):
         if bk == "jnp":
-            return _loops_sdd_impl(fmt, dy, b, bk, bn)
+            return _loops_sdd_impl(fmt, dy, b, bk, bn, pipeline_depth)
 
         @jax.custom_batching.custom_vmap
         def call(dy_, b_):
-            return _loops_sdd_impl(fmt, dy_, b_, bk, bn)
+            return _loops_sdd_impl(fmt, dy_, b_, bk, bn, pipeline_depth)
 
         @call.def_vmap
         def _vmap_rule(axis_size, in_batched, dy_, b_):
             dy_b, b_b = in_batched
             outs = [loops_sdd(fmt, dy_[i] if dy_b else dy_,
-                              b_[i] if b_b else b_, backend=bk, bn=bn)
+                              b_[i] if b_b else b_, backend=bk, bn=bn,
+                              pipeline_depth=pipeline_depth)
                     for i in range(axis_size)]
             return (jnp.stack([o[0] for o in outs]),
                     jnp.stack([o[1] for o in outs])), (True, True)
@@ -507,7 +564,7 @@ def loops_sdd(fmt, dy: jax.Array, b: jax.Array, *,
     return _fallback.run_chain("loops", "sdd", backend, attempt)
 
 
-def _loops_sdd_impl(fmt, dy, b, backend, bn):
+def _loops_sdd_impl(fmt, dy, b, backend, bn, pipeline_depth=1):
     """The actual SDD dispatch (batch summed); see :func:`loops_sdd`."""
     csr, bc = fmt.csr_part, fmt.bcsr_part
     nblocks, br = bc.nblocks, bc.br
@@ -543,22 +600,25 @@ def _loops_sdd_impl(fmt, dy, b, backend, bn):
     dy_pad3 = _pad_flat_batch(flatten_batch(dy_pad)[0])
     cp, bp = fmt.csr_panels, fmt.bcsr_panels
     nb = int(b3.shape[0]) if b3.ndim == 3 else 1
+    depth = int(pipeline_depth)
     if has_csr:
         _note("csr", "sdd", backend=backend, impl="panels",
-              units=int(cp.npanels), batch=nb, n=int(b.shape[-1]))
+              units=int(cp.npanels), batch=nb, n=int(b.shape[-1]),
+              pipeline_depth=depth)
     if has_bcsr:
         _note("bcsr", "sdd", backend=backend, impl="panels",
-              units=int(bp.npanels), batch=nb, n=int(b.shape[-1]))
+              units=int(bp.npanels), batch=nb, n=int(b.shape[-1]),
+              pipeline_depth=depth)
     if has_csr:
         d_csr = cp.gather_values(get_kernel("csr", "sdd", "panels")(
             jnp.asarray(cp.panel_rows), jnp.asarray(cp.panel_cols), dy3, b3,
-            bn=bn, interpret=interpret))
+            bn=bn, interpret=interpret, pipeline_depth=depth))
     else:
         d_csr = jnp.zeros((csr.nnz,), acc)
     if has_bcsr:
         d_bcsr = bp.gather_values(get_kernel("bcsr", "sdd", "panels")(
             jnp.asarray(bp.panel_rows), jnp.asarray(bp.panel_cols), dy_pad3,
-            b3, br=br, bn=bn, interpret=interpret))
+            b3, br=br, bn=bn, interpret=interpret, pipeline_depth=depth))
     else:
         d_bcsr = jnp.zeros(bc.tile_vals.shape, acc)
     return d_csr, d_bcsr

@@ -15,27 +15,95 @@ scalar-prefetch panel metadata is shared across the batch — A's static
 panel layout is loaded once per grid step and applied to all ``bz``
 slices.  ``grid_dims`` centralises the two grid layouts so the kernels'
 ``first``/``last`` revisit predicates can never disagree with the specs.
+
+Pipelining (``pipeline_depth=2``): the panel axis is stretched by
+``depth - 1`` ramp steps and the load/compute streams are skewed one step
+apart — grid step ``k`` *assembles* panel ``lidx(k) = min(k, P-1)``'s B rows
+into the ping-pong scratch slot ``k % 2`` while it *contracts* panel
+``cidx(k) = max(k - (depth-1), 0)`` out of slot ``(k+1) % 2``.  The B-row
+gathers (the dominant DMA traffic) for panel ``p+1`` thus overlap the MXU
+contraction of panel ``p``.  ``pipeline_index`` builds the two index maps;
+with ``depth=1`` both are the identity and every spec below is exactly the
+unpipelined layout.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["CARRY_OPERAND_INDEX", "first_last", "grid_dims", "panel_operands",
-           "split_panel_refs"]
+__all__ = ["CARRY_OPERAND_INDEX", "PIPELINE_DEPTHS", "check_pipeline_depth",
+           "default_bn", "first_last", "first_last_at", "grid_dims",
+           "panel_operands", "parity", "pipeline_index", "split_panel_refs"]
 
 # Position of the fused-path carry among ALL pallas_call operands (scalar
 # prefetch included): rows(0), cols(1), vals(2), mask(3), carry(4).
 CARRY_OPERAND_INDEX = 4
 
+# Supported software-pipeline depths: 1 = today's serial gather->contract
+# kernels, 2 = double-buffered B-panel prefetch (ping-pong scratch).
+PIPELINE_DEPTHS = (1, 2)
 
-def grid_dims(*, batch: int | None, bz: int, n: int, bn: int, npanels: int):
+
+def default_bn(n: int) -> int:
+    """Largest lane-aligned column-block width that tiles ``n`` exactly.
+
+    ``n <= 512`` keeps the whole row in one block; above that, pick the
+    largest divisor of ``n`` that is ``<= 512``, preferring MXU-lane
+    multiples (128), then VPU-lane multiples (8), then any divisor — so
+    awkward widths (N=600 -> 200) get a legal default instead of the old
+    ``min(n, 512)`` raising ``ValueError`` when ``512 ∤ n``.
+    """
+    n = int(n)
+    if n <= 512:
+        return max(n, 1)
+    divisors = [d for d in range(1, 513) if n % d == 0]
+    for align in (128, 8, 1):
+        aligned = [d for d in divisors if d % align == 0]
+        if aligned:
+            return max(aligned)
+    return 1   # unreachable: 1 always divides n
+
+
+def parity(k):
+    """``k % 2`` in ``k``'s own integer dtype — ``jax.lax.rem(k, 2)`` trips
+    the stablehlo verifier under x64 (i32 program_id vs weak-i64 literal)."""
+    return jax.lax.rem(k, jnp.asarray(2, k.dtype))
+
+
+def check_pipeline_depth(pipeline_depth: int) -> int:
+    depth = int(pipeline_depth)
+    if depth not in PIPELINE_DEPTHS:
+        raise ValueError(f"pipeline_depth must be one of {PIPELINE_DEPTHS}, "
+                         f"got {pipeline_depth}")
+    return depth
+
+
+def pipeline_index(depth: int, npanels: int):
+    """``(lidx, cidx)`` index maps for a depth-deep panel pipeline.
+
+    ``lidx(k)`` is the panel whose B rows grid step ``k`` loads (clamped to
+    the last panel during the drain); ``cidx(k)`` is the panel it contracts
+    (clamped to 0 during the fill ramp — compute is predicated off there,
+    the clamp only keeps the block indices in range).  ``depth=1`` returns
+    identities, reproducing the unpipelined specs exactly.
+    """
+    if depth == 1:
+        return (lambda k: k), (lambda k: k)
+    return (lambda k: jnp.minimum(k, npanels - 1),
+            lambda k: jnp.maximum(k - (depth - 1), 0))
+
+
+def grid_dims(*, batch: int | None, bz: int, n: int, bn: int, npanels: int,
+              pipeline_depth: int = 1):
     """``(grid, panel_axis)`` for a panel kernel: the panel axis is always
     innermost (the accumulator-revisit protocol needs all panels of a row
-    consecutive); batched calls prepend a batch-block axis."""
+    consecutive); batched calls prepend a batch-block axis.  A depth-``d``
+    pipeline stretches the panel axis by ``d - 1`` fill/drain ramp steps."""
+    steps = npanels + check_pipeline_depth(pipeline_depth) - 1
     if batch is None:
-        return (n // bn, npanels), 1
-    return (batch // bz, n // bn, npanels), 2
+        return (n // bn, steps), 1
+    return (batch // bz, n // bn, steps), 2
 
 
 def first_last(rows_ref, panel_axis: int = 1):
@@ -43,12 +111,19 @@ def first_last(rows_ref, panel_axis: int = 1):
     does the inner grid step ``k`` (on ``panel_axis``) open / close its
     output row's visit?"""
     k = pl.program_id(panel_axis)
-    npanels = pl.num_programs(panel_axis)
-    row_here = rows_ref[k]
-    row_prev = rows_ref[jnp.maximum(k - 1, 0)]
-    row_next = rows_ref[jnp.minimum(k + 1, npanels - 1)]
-    first = jnp.logical_or(k == 0, row_here != row_prev)
-    last = jnp.logical_or(k == npanels - 1, row_here != row_next)
+    return first_last_at(rows_ref, k, pl.num_programs(panel_axis))
+
+
+def first_last_at(rows_ref, c, npanels):
+    """(first, last) revisit predicates evaluated at an explicit panel
+    index ``c`` over ``npanels`` panels — the pipelined kernels compute
+    panel ``cidx(k)``, not panel ``k``, so the predicates must follow the
+    compute stream, not the grid step."""
+    row_here = rows_ref[c]
+    row_prev = rows_ref[jnp.maximum(c - 1, 0)]
+    row_next = rows_ref[jnp.minimum(c + 1, npanels - 1)]
+    first = jnp.logical_or(c == 0, row_here != row_prev)
+    last = jnp.logical_or(c == npanels - 1, row_here != row_next)
     return first, last
 
 
@@ -65,7 +140,8 @@ def split_panel_refs(refs, g: int, has_carry: bool):
 
 def panel_operands(*, g: int, bn: int, vals_block, vals, mask, b,
                    carry=None, carry_block=None, row_map=None,
-                   bz: int | None = None):
+                   bz: int | None = None, pipeline_depth: int = 1,
+                   npanels: int | None = None):
     """Assemble the tensor-operand train shared by both panel kernels.
 
     Args:
@@ -76,36 +152,46 @@ def panel_operands(*, g: int, bn: int, vals_block, vals, mask, b,
                    index of the carry/output; used to build the carry spec.
       bz:          batch slices per grid step, or None for the unbatched
                    2-D layout.
+      pipeline_depth / npanels: skew the load stream (mask + B gathers,
+                   indexed at ``lidx(k)``) ``depth - 1`` steps ahead of the
+                   compute stream (vals + carry, indexed at ``cidx(k)``).
+                   ``depth=1`` keeps both at ``k`` — today's layout.
 
     Returns ``(in_specs, args, input_output_aliases)``: vals and the
     ``(1, G)`` mask, the optional aliased carry, then G gathers of ``b``
     indexed by the scalar-prefetched ``panel_cols`` — one DMA stream per
     panel lane, ``bz`` batch slices wide when batched.
     """
+    depth = check_pipeline_depth(pipeline_depth)
+    if depth > 1 and npanels is None:
+        raise ValueError("pipelined panel_operands needs npanels")
+    lidx, cidx = pipeline_index(depth, npanels if npanels is not None else 0)
     vals_index = (0,) * (len(vals_block) - 1)
     if bz is None:
         def _meta(block):
             return pl.BlockSpec(block, lambda j, k, rows, cols:
-                                (k,) + vals_index)
-        mask_spec = pl.BlockSpec((1, g), lambda j, k, rows, cols: (k, 0))
+                                (cidx(k),) + vals_index)
+        mask_spec = pl.BlockSpec((1, g),
+                                 lambda j, k, rows, cols: (lidx(k), 0))
         b_specs = [
             pl.BlockSpec((1, bn), lambda j, k, rows, cols, i=i:
-                         (cols[k, i], j))
+                         (cols[lidx(k), i], j))
             for i in range(g)]
         carry_spec = carry_block and pl.BlockSpec(
-            carry_block, lambda j, k, rows, cols: row_map(rows, k, j))
+            carry_block, lambda j, k, rows, cols: row_map(rows, cidx(k), j))
     else:
         def _meta(block):
             return pl.BlockSpec(block, lambda z, j, k, rows, cols:
-                                (k,) + vals_index)
-        mask_spec = pl.BlockSpec((1, g), lambda z, j, k, rows, cols: (k, 0))
+                                (cidx(k),) + vals_index)
+        mask_spec = pl.BlockSpec((1, g),
+                                 lambda z, j, k, rows, cols: (lidx(k), 0))
         b_specs = [
             pl.BlockSpec((bz, 1, bn), lambda z, j, k, rows, cols, i=i:
-                         (z, cols[k, i], j))
+                         (z, cols[lidx(k), i], j))
             for i in range(g)]
         carry_spec = carry_block and pl.BlockSpec(
             (bz,) + tuple(carry_block),
-            lambda z, j, k, rows, cols: (z,) + row_map(rows, k, j))
+            lambda z, j, k, rows, cols: (z,) + row_map(rows, cidx(k), j))
 
     in_specs = [_meta(vals_block), mask_spec]
     args = [vals, mask]

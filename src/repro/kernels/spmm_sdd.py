@@ -48,22 +48,37 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from .engine import acc_dtype_for, batch_block, register_kernel
+from .panel_common import check_pipeline_depth, default_bn, parity
 
 __all__ = ["csr_sdd_panels_pallas", "bcsr_sdd_panels_pallas"]
 
 
-def _reduction_edges(bz: int | None):
+def _reduction_edges(bz: int | None, depth: int = 1):
     """(first, last) predicates over the per-panel reduction axes — the
     column blocks and, when batched, the batch blocks — shared by both SDD
-    kernels so init/flush can never disagree with the grid layout."""
+    kernels so init/flush can never disagree with the grid layout.  A
+    depth-``d`` pipeline skews the compute stream ``d - 1`` steps behind
+    the column-block grid axis (the fill-ramp steps are load-only), so the
+    reduction opens at ``j == depth - 1`` instead of 0."""
     if bz is None:
         j = pl.program_id(1)
         nb = pl.num_programs(1)
-        return j == 0, j == nb - 1
+        return j == depth - 1, j == nb - 1
     z, j = pl.program_id(1), pl.program_id(2)
     nz, nb = pl.num_programs(1), pl.num_programs(2)
-    return jnp.logical_and(z == 0, j == 0), \
+    return jnp.logical_and(z == 0, j == depth - 1), \
         jnp.logical_and(z == nz - 1, j == nb - 1)
+
+
+def _sdd_col_maps(depth: int, nb: int):
+    """``(lj, cj)`` column-block index maps for the SDD reduction axis:
+    grid step ``jj`` loads B's column block ``lj(jj) = min(jj, nb-1)`` and
+    reduces the cotangent's column block ``cj(jj) = max(jj - (depth-1), 0)``.
+    Identity maps at depth 1."""
+    if depth == 1:
+        return (lambda jj: jj), (lambda jj: jj)
+    return (lambda jj: jnp.minimum(jj, nb - 1),
+            lambda jj: jnp.maximum(jj - (depth - 1), 0))
 
 
 def _csr_sdd_kernel(g: int, bz: int | None, *refs):
@@ -90,11 +105,67 @@ def _csr_sdd_kernel(g: int, bz: int | None, *refs):
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("bn", "interpret"))
+def _piped_csr_sdd_kernel(g: int, bz: int | None, depth: int, *refs):
+    """Depth-2 SDD pipeline over the column-block reduction axis: step
+    ``jj`` copies B's column block ``min(jj, nb-1)`` into ping-pong scratch
+    slot ``jj % 2`` (packed in B's storage dtype) while reducing the
+    cotangent's column block ``max(jj - 1, 0)`` against slot
+    ``(jj+1) % 2``."""
+    _, _, dy_ref, *rest = refs
+    b_refs, (o_ref, bpan_ref, acc_ref) = rest[:g], rest[g:]
+    jaxis = 1 if bz is None else 2
+    jj = pl.program_id(jaxis)
+    first, last = _reduction_edges(bz, depth)
+
+    def _assemble(slot):
+        for i, b_ref in enumerate(b_refs):
+            if bz is None:
+                bpan_ref[slot, i, :] = b_ref[...].astype(bpan_ref.dtype)[0]
+            else:
+                bpan_ref[slot, :, i, :] = \
+                    b_ref[...][:, 0, :].astype(bpan_ref.dtype)
+
+    for s in (0, 1):
+        @pl.when(parity(jj) == s)
+        def _(s=s):
+            _assemble(s)
+
+    @pl.when(jj >= depth - 1)
+    def _compute():
+        @pl.when(first)
+        def _init():
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        dy = dy_ref[...].astype(acc_ref.dtype)   # (1, bn) or (bz, 1, bn)
+
+        def _reduce(slot):
+            if bz is None:
+                lanes = [jnp.sum(dy * bpan_ref[slot, i, :]
+                                 .astype(acc_ref.dtype))[None]
+                         for i in range(g)]
+            else:
+                lanes = [jnp.sum(dy[:, 0, :] * bpan_ref[slot, :, i, :]
+                                 .astype(acc_ref.dtype))[None]
+                         for i in range(g)]
+            acc_ref[...] += jnp.stack(lanes, axis=-1)    # (1, g)
+
+        for s in (0, 1):
+            @pl.when(parity(jj + 1) == s)
+            def _(s=s):
+                _reduce(s)
+
+        @pl.when(last)
+        def _flush():
+            o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bn", "interpret", "pipeline_depth"))
 def csr_sdd_panels_pallas(panel_rows: jax.Array, panel_cols: jax.Array,
                           dy: jax.Array, b: jax.Array, *,
                           bn: int | None = None,
-                          interpret: bool = True) -> jax.Array:
+                          interpret: bool = True,
+                          pipeline_depth: int = 1) -> jax.Array:
     """Per-nonzero gradients for the CSR part, in panel layout.
 
     Args:
@@ -110,43 +181,56 @@ def csr_sdd_panels_pallas(panel_rows: jax.Array, panel_cols: jax.Array,
     if dy.ndim != b.ndim or b.ndim not in (2, 3):
         raise ValueError(f"dy/b must both be rank 2 or 3; got {dy.ndim} / "
                          f"{b.ndim}")
+    depth = check_pipeline_depth(pipeline_depth)
     npanels, g = panel_cols.shape
     n = b.shape[-1]
-    bn = bn or min(n, 512)
+    bn = bn or default_bn(n)
     if n % bn:
         raise ValueError(f"N={n} not divisible by bn={bn}")
     acc_dtype = acc_dtype_for(b.dtype)
     batch = b.shape[0] if b.ndim == 3 else None
+    nb = n // bn
+    lj, cj = _sdd_col_maps(depth, nb)
     if batch is None:
-        grid = (npanels, n // bn)
+        grid = (npanels, nb + depth - 1)
         bz = None
         in_specs = [
-            pl.BlockSpec((1, bn), lambda p, j, rows, cols: (rows[p], j)),
+            pl.BlockSpec((1, bn),
+                         lambda p, j, rows, cols: (rows[p], cj(j))),
             *[pl.BlockSpec((1, bn),
-                           lambda p, j, rows, cols, i=i: (cols[p, i], j))
+                           lambda p, j, rows, cols, i=i: (cols[p, i], lj(j)))
               for i in range(g)],
         ]
         out_specs = pl.BlockSpec((1, g), lambda p, j, rows, cols: (p, 0))
+        bpan_shape = (depth, g, bn)
     else:
         bz = batch_block(batch)
-        grid = (npanels, batch // bz, n // bn)
+        grid = (npanels, batch // bz, nb + depth - 1)
         in_specs = [
             pl.BlockSpec((bz, 1, bn),
-                         lambda p, z, j, rows, cols: (z, rows[p], j)),
+                         lambda p, z, j, rows, cols: (z, rows[p], cj(j))),
             *[pl.BlockSpec((bz, 1, bn),
-                           lambda p, z, j, rows, cols, i=i: (z, cols[p, i], j))
+                           lambda p, z, j, rows, cols, i=i:
+                           (z, cols[p, i], lj(j)))
               for i in range(g)],
         ]
         out_specs = pl.BlockSpec((1, g), lambda p, z, j, rows, cols: (p, 0))
+        bpan_shape = (depth, bz, g, bn)
+    scratch = [pltpu.VMEM((1, g), acc_dtype)]
+    if depth > 1:
+        scratch.insert(0, pltpu.VMEM(bpan_shape, b.dtype))  # packed ping-pong
+        kernel = functools.partial(_piped_csr_sdd_kernel, g, bz, depth)
+    else:
+        kernel = functools.partial(_csr_sdd_kernel, g, bz)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,  # panel_rows, panel_cols
         grid=grid,
         in_specs=in_specs,
         out_specs=out_specs,
-        scratch_shapes=[pltpu.VMEM((1, g), acc_dtype)],
+        scratch_shapes=scratch,
     )
     return pl.pallas_call(
-        functools.partial(_csr_sdd_kernel, g, bz),
+        kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((npanels, g), acc_dtype),
         interpret=interpret,
@@ -165,11 +249,16 @@ def _bcsr_sdd_kernel(g: int, bz: int | None, *refs):
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
+    # The B panel stays packed in B's storage dtype in scratch (half the
+    # VMEM for bf16/f16); promotion to the accumulation dtype happens at
+    # the dot operand read — bf16 -> f32 is exact, so results are
+    # unchanged.
     if bz is None:
         for i, b_ref in enumerate(b_refs):
             bpan_ref[i, :] = b_ref[...].astype(bpan_ref.dtype)[0]
         acc_ref[...] += jax.lax.dot_general(
-            dy_ref[...].astype(acc_ref.dtype), bpan_ref[...],
+            dy_ref[...].astype(acc_ref.dtype),
+            bpan_ref[...].astype(acc_ref.dtype),
             (((1,), (1,)), ((), ())),
             preferred_element_type=acc_ref.dtype)       # (br, g)
     else:
@@ -178,7 +267,8 @@ def _bcsr_sdd_kernel(g: int, bz: int | None, *refs):
         # (bz, br, bn) x (bz, g, bn) contracted over (batch, bn) -> (br, g):
         # the batch axis joins the N-reduction, realising the batch sum.
         acc_ref[...] += jax.lax.dot_general(
-            dy_ref[...].astype(acc_ref.dtype), bpan_ref[...],
+            dy_ref[...].astype(acc_ref.dtype),
+            bpan_ref[...].astype(acc_ref.dtype),
             (((0, 2), (0, 2)), ((), ())),
             preferred_element_type=acc_ref.dtype)       # (br, g)
 
@@ -187,11 +277,67 @@ def _bcsr_sdd_kernel(g: int, bz: int | None, *refs):
         o_ref[...] = acc_ref[...][None].astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("br", "bn", "interpret"))
+def _piped_bcsr_sdd_kernel(g: int, bz: int | None, depth: int, *refs):
+    """Depth-2 SDD pipeline over the column-block reduction axis (BCSR
+    part): step ``jj`` assembles B's column block ``min(jj, nb-1)`` into
+    ping-pong slot ``jj % 2`` while the MXU contracts the cotangent's
+    column block ``max(jj - 1, 0)`` against slot ``(jj+1) % 2``."""
+    _, _, dy_ref, *rest = refs
+    b_refs, (o_ref, bpan_ref, acc_ref) = rest[:g], rest[g:]
+    jaxis = 1 if bz is None else 2
+    jj = pl.program_id(jaxis)
+    first, last = _reduction_edges(bz, depth)
+
+    def _assemble(slot):
+        for i, b_ref in enumerate(b_refs):
+            if bz is None:
+                bpan_ref[slot, i, :] = b_ref[...].astype(bpan_ref.dtype)[0]
+            else:
+                bpan_ref[slot, :, i, :] = \
+                    b_ref[...][:, 0, :].astype(bpan_ref.dtype)
+
+    for s in (0, 1):
+        @pl.when(parity(jj) == s)
+        def _(s=s):
+            _assemble(s)
+
+    @pl.when(jj >= depth - 1)
+    def _compute():
+        @pl.when(first)
+        def _init():
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        def _contract(slot):
+            if bz is None:
+                acc_ref[...] += jax.lax.dot_general(
+                    dy_ref[...].astype(acc_ref.dtype),
+                    bpan_ref[slot].astype(acc_ref.dtype),
+                    (((1,), (1,)), ((), ())),
+                    preferred_element_type=acc_ref.dtype)       # (br, g)
+            else:
+                acc_ref[...] += jax.lax.dot_general(
+                    dy_ref[...].astype(acc_ref.dtype),
+                    bpan_ref[slot].astype(acc_ref.dtype),
+                    (((0, 2), (0, 2)), ((), ())),
+                    preferred_element_type=acc_ref.dtype)       # (br, g)
+
+        for s in (0, 1):
+            @pl.when(parity(jj + 1) == s)
+            def _(s=s):
+                _contract(s)
+
+        @pl.when(last)
+        def _flush():
+            o_ref[...] = acc_ref[...][None].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("br", "bn", "interpret",
+                                             "pipeline_depth"))
 def bcsr_sdd_panels_pallas(panel_rows: jax.Array, panel_cols: jax.Array,
                            dy_pad: jax.Array, b: jax.Array, *, br: int,
                            bn: int | None = None,
-                           interpret: bool = True) -> jax.Array:
+                           interpret: bool = True,
+                           pipeline_depth: int = 1) -> jax.Array:
     """Per-tile-element gradients for the BCSR part, in panel layout.
 
     Args:
@@ -208,40 +354,51 @@ def bcsr_sdd_panels_pallas(panel_rows: jax.Array, panel_cols: jax.Array,
     if dy_pad.ndim != b.ndim or b.ndim not in (2, 3):
         raise ValueError(f"dy_pad/b must both be rank 2 or 3; got "
                          f"{dy_pad.ndim} / {b.ndim}")
+    depth = check_pipeline_depth(pipeline_depth)
     npanels, g = panel_cols.shape
     n = b.shape[-1]
-    bn = bn or min(n, 512)
+    bn = bn or default_bn(n)
     if n % bn:
         raise ValueError(f"N={n} not divisible by bn={bn}")
     acc_dtype = acc_dtype_for(b.dtype)
     batch = b.shape[0] if b.ndim == 3 else None
+    nb = n // bn
+    lj, cj = _sdd_col_maps(depth, nb)
     if batch is None:
         bz = None
-        grid = (npanels, n // bn)
+        grid = (npanels, nb + depth - 1)
         in_specs = [
-            pl.BlockSpec((br, bn), lambda p, j, rows, cols: (rows[p], j)),
+            pl.BlockSpec((br, bn),
+                         lambda p, j, rows, cols: (rows[p], cj(j))),
             *[pl.BlockSpec((1, bn),
-                           lambda p, j, rows, cols, i=i: (cols[p, i], j))
+                           lambda p, j, rows, cols, i=i: (cols[p, i], lj(j)))
               for i in range(g)],
         ]
         out_specs = pl.BlockSpec((1, br, g),
                                  lambda p, j, rows, cols: (p, 0, 0))
-        scratch = [pltpu.VMEM((g, bn), acc_dtype),      # B panel
+        bpan_shape = (g, bn) if depth == 1 else (depth, g, bn)
+        scratch = [pltpu.VMEM(bpan_shape, b.dtype),     # B panel (packed)
                    pltpu.VMEM((br, g), acc_dtype)]      # accumulator
     else:
         bz = batch_block(batch)
-        grid = (npanels, batch // bz, n // bn)
+        grid = (npanels, batch // bz, nb + depth - 1)
         in_specs = [
             pl.BlockSpec((bz, br, bn),
-                         lambda p, z, j, rows, cols: (z, rows[p], j)),
+                         lambda p, z, j, rows, cols: (z, rows[p], cj(j))),
             *[pl.BlockSpec((bz, 1, bn),
-                           lambda p, z, j, rows, cols, i=i: (z, cols[p, i], j))
+                           lambda p, z, j, rows, cols, i=i:
+                           (z, cols[p, i], lj(j)))
               for i in range(g)],
         ]
         out_specs = pl.BlockSpec((1, br, g),
                                  lambda p, z, j, rows, cols: (p, 0, 0))
-        scratch = [pltpu.VMEM((bz, g, bn), acc_dtype),
+        bpan_shape = (bz, g, bn) if depth == 1 else (depth, bz, g, bn)
+        scratch = [pltpu.VMEM(bpan_shape, b.dtype),     # B panels (packed)
                    pltpu.VMEM((br, g), acc_dtype)]
+    if depth > 1:
+        kernel = functools.partial(_piped_bcsr_sdd_kernel, g, bz, depth)
+    else:
+        kernel = functools.partial(_bcsr_sdd_kernel, g, bz)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,  # panel_rows, panel_cols
         grid=grid,
@@ -250,7 +407,7 @@ def bcsr_sdd_panels_pallas(panel_rows: jax.Array, panel_cols: jax.Array,
         scratch_shapes=scratch,
     )
     return pl.pallas_call(
-        functools.partial(_bcsr_sdd_kernel, g, bz),
+        kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((npanels, br, g), acc_dtype),
         interpret=interpret,

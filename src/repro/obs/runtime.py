@@ -93,6 +93,13 @@ class _EngineTracer:
             m.gauge("engine.grid_steps", part=part, op=op).set(float(steps))
             m.counter("engine.grid_steps_compiled", part=part,
                       op=op).inc(float(steps))
+        sb = fields.get("scratch_bytes")
+        if sb is not None:
+            m.gauge("kernel.scratch_bytes", part=part, op=op).set(float(sb))
+        ov = fields.get("prefetch_overlap")
+        if ov is not None:
+            m.gauge("engine.prefetch_overlap", part=part,
+                    op=op).set(float(ov))
         if self.prev is not None:
             self.prev.on_dispatch(part=part, op=op, **fields)
 

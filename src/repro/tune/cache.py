@@ -58,7 +58,11 @@ __all__ = ["PlanCache", "CacheStats", "CACHE_VERSION", "default_cache_dir"]
 # batched execution engine amortises A's panels across batch slices, so a
 # v2 record keyed on the trailing dim alone would transfer a plan tuned for
 # an 8x narrower workload.
-CACHE_VERSION = 3
+# v4: plans carry ``pipeline_depth`` (double-buffered B-panel prefetch) and
+# ``macro_m`` (same-row macro-step fusion) — knob-less v3 plans were tuned
+# against a strictly serial, unfused search space and must never replay as
+# if depth-1/macro-1 were still the only execution shape.
+CACHE_VERSION = 4
 
 # Lock-free read-retry: parse attempts before a persistently unparseable
 # file is quarantined, and the wait between them (a racing atomic write

@@ -100,9 +100,14 @@ def _r_candidates(csr: CSR, br: int, splits: Sequence[Tuple[int, int]],
 def enumerate_plans(csr: CSR, *, total_workers: int = 8,
                     br_choices: Sequence[int] = (2, 4, 8),
                     g_choices: Sequence[int] = (1, 4, 8),
+                    depth_choices: Sequence[int] = (1, 2),
+                    macro_choices: Sequence[int] = (1, 4),
                     tp_vpu: float = 1.0, tp_mxu: float = 4.0
                     ) -> List[SpmmPlan]:
-    """The full (deduplicated) candidate plan space."""
+    """The full (deduplicated) candidate plan space, including the pipeline
+    axes: ``pipeline_depth`` (double-buffered B-panel prefetch) and
+    ``macro_m`` (same-row macro-step fusion, panelizing at the effective
+    width ``panel_g·macro_m``)."""
     seen, plans = set(), []
     splits = [(x, y) for (x, y) in _worker_splits(total_workers) if x + y > 0]
     for br in br_choices:
@@ -115,12 +120,16 @@ def enumerate_plans(csr: CSR, *, total_workers: int = 8,
                 if r_b < csr.nrows and t_mxu == 0:
                     continue
                 for g in g_choices:
-                    key = (r_b, br, t_vpu, t_mxu, g)
-                    if key in seen:
-                        continue
-                    seen.add(key)
-                    plans.append(SpmmPlan(r_boundary=r_b, t_vpu=t_vpu,
-                                          t_mxu=t_mxu, br=br, panel_g=g))
+                    for d in depth_choices:
+                        for m in macro_choices:
+                            key = (r_b, br, t_vpu, t_mxu, g, d, m)
+                            if key in seen:
+                                continue
+                            seen.add(key)
+                            plans.append(SpmmPlan(
+                                r_boundary=r_b, t_vpu=t_vpu, t_mxu=t_mxu,
+                                br=br, panel_g=g, pipeline_depth=d,
+                                macro_m=m))
     return plans
 
 
@@ -148,7 +157,9 @@ def measure_plan_gflops(csr: CSR, plan: SpmmPlan, b: jax.Array, *,
     ``prod(batch) * N`` the engine actually processes."""
     from .fingerprint import effective_n_cols
     fmt = loops_from_csr(csr, plan.r_boundary, plan.br,
-                         panel_g=plan.panel_g)
+                         panel_g=plan.panel_g,
+                         macro_m=getattr(plan, "macro_m", 1),
+                         pipeline_depth=getattr(plan, "pipeline_depth", 1))
     f = jax.jit(lambda bb: loops_spmm(fmt, bb, backend=backend))
     secs = _time_fn(f, b, repeats=budget.repeats, warmup=budget.warmup)
     nnz = max(fmt.nnz, 1)
@@ -172,6 +183,8 @@ def search(csr: CSR, *, n_cols: int = 32, rhs_shape=None,
            model: Optional[QuadraticPerfModel] = None,
            br_choices: Sequence[int] = (2, 4, 8),
            g_choices: Sequence[int] = (1, 4, 8),
+           depth_choices: Sequence[int] = (1, 2),
+           macro_choices: Sequence[int] = (1, 4),
            budget: SearchBudget = SearchBudget(), backend: str = "jnp",
            b: Optional[jax.Array] = None, seed: int = 0,
            tp_vpu: float = 1.0, tp_mxu: float = 4.0,
@@ -214,6 +227,8 @@ def search(csr: CSR, *, n_cols: int = 32, rhs_shape=None,
     model = model or prior_model(total_workers)
     plans = enumerate_plans(csr, total_workers=total_workers,
                             br_choices=br_choices, g_choices=g_choices,
+                            depth_choices=depth_choices,
+                            macro_choices=macro_choices,
                             tp_vpu=tp_vpu, tp_mxu=tp_mxu)
 
     # Warm start.  The Eq. 2 model only sees the worker split, so by itself
@@ -225,17 +240,30 @@ def search(csr: CSR, *, n_cols: int = 32, rhs_shape=None,
     # is ranked by its measured panel terms when the model has them, else by
     # the structural grid-step reduction it buys on this matrix.
     n = max(csr.nrows, 1)
-    step_prior = _step_reduction_priors(csr, g_choices)
+    # Priors are computed over *effective* widths (panel_g·macro_m) — the
+    # width the conversion actually panelizes at — so the macro axis shares
+    # the same structural step-reduction signal as the G axis.
+    eff_widths = sorted({max(g, 1) * max(m, 1)
+                         for g in g_choices for m in macro_choices}
+                        | set(g_choices))
+    step_prior = _step_reduction_priors(csr, eff_widths)
 
     if measure is None and backend == "jnp":
         # The jnp reference executes the flat arrays — wall clock on it is
-        # blind to panel_g, so "measuring" the G axis would let timing noise
-        # pick the cached width.  Pin G to the structural winner (max grid-
-        # step reduction; ties prefer the narrower panel, whose padding DMA
-        # is smaller) and spend the whole measurement budget on genuinely
-        # different (r_boundary, br) conversions.
-        g_star = max(g_choices, key=lambda g: (step_prior.get(g, 0.0), -g))
-        plans = [p for p in plans if p.panel_g == g_star]
+        # blind to panel_g/macro_m/pipeline_depth, so "measuring" those axes
+        # would let timing noise pick the cached knobs.  Pin (G, macro_m) to
+        # the structural winner (max grid-step reduction at the effective
+        # width; ties prefer the narrower effective panel, whose padding DMA
+        # is smaller, and within a width the macro-fused shape, which costs
+        # fewer grid dispatches), pin depth to 1 (ramp steps only ever add
+        # work the jnp path cannot observe), and spend the whole measurement
+        # budget on genuinely different (r_boundary, br) conversions.
+        g_star, m_star = max(
+            ((g, m) for g in g_choices for m in macro_choices),
+            key=lambda gm: (step_prior.get(gm[0] * gm[1], 0.0),
+                            -(gm[0] * gm[1]), gm[1]))
+        plans = [p for p in plans if p.panel_g == g_star
+                 and p.macro_m == m_star and p.pipeline_depth == 1]
 
     def _prior(p: SpmmPlan) -> float:
         t_v = p.r_boundary / (tp_vpu * p.t_vpu) if p.r_boundary else 0.0
@@ -247,7 +275,7 @@ def search(csr: CSR, *, n_cols: int = 32, rhs_shape=None,
             g_scale = 1.0
         else:
             capacity = float(model.predict(p.t_vpu, p.t_mxu))
-            g_scale = step_prior.get(p.panel_g, 1.0)
+            g_scale = step_prior.get(p.panel_g * p.macro_m, 1.0)
         return max(capacity, 1e-12) * g_scale * n / bottleneck
 
     # Replay-based pruning: when a trace database can support a per-step
@@ -264,20 +292,42 @@ def search(csr: CSR, *, n_cols: int = 32, rhs_shape=None,
                 else n_cols
             def replay_rank(p: SpmmPlan) -> float:  # noqa: E731-style rebind
                 s_csr, s_bcsr = predict_part_steps(csr, p, eff_cols)
-                return trace_db.predict_us(coef, s_csr, s_bcsr, p.panel_g)
+                return trace_db.predict_us(
+                    coef, s_csr, s_bcsr, p.panel_g * p.macro_m,
+                    depth=p.pipeline_depth)
 
     scored = sorted(plans, key=(replay_rank if replay_rank is not None
                                 else lambda p: -_prior(p)))
     survivors: List[SpmmPlan] = []
     seen_conv = set()
+    seen_base = set()
+    k = min(budget.top_k, budget.max_trials)
+    # Two-pass slot allocation: a small budget must still span genuinely
+    # different (r_boundary, br) conversions — the panel/pipeline axes
+    # multiply the space and would otherwise fill every slot with shape
+    # variants of the single best boundary.  Each boundary/tile pair is
+    # represented by its best-ranked (G, macro_m, depth) shape; leftover
+    # slots then explore the remaining variants in rank order.
     for p in scored:
-        conv = (p.r_boundary, p.br, p.panel_g)
-        if conv in seen_conv:
+        base = (p.r_boundary, p.br)
+        if base in seen_base:
             continue
-        seen_conv.add(conv)
+        seen_base.add(base)
+        seen_conv.add((p.r_boundary, p.br, p.panel_g, p.macro_m,
+                       p.pipeline_depth))
         survivors.append(p)
-        if len(survivors) >= min(budget.top_k, budget.max_trials):
+        if len(survivors) >= k:
             break
+    if len(survivors) < k:
+        for p in scored:
+            conv = (p.r_boundary, p.br, p.panel_g, p.macro_m,
+                    p.pipeline_depth)
+            if conv in seen_conv:
+                continue
+            seen_conv.add(conv)
+            survivors.append(p)
+            if len(survivors) >= k:
+                break
 
     meas = measure or (lambda c, p, bb: measure_plan_gflops(
         c, p, bb, backend=backend, budget=budget))
@@ -319,7 +369,9 @@ def search(csr: CSR, *, n_cols: int = 32, rhs_shape=None,
         note_degraded("tune.search.degraded", reason="all-trials-failed")
         best_plan = survivors[0] if survivors else scored[0]
         best_fmt = loops_from_csr(csr, best_plan.r_boundary, best_plan.br,
-                                  panel_g=best_plan.panel_g)
+                                  panel_g=best_plan.panel_g,
+                                  macro_m=best_plan.macro_m,
+                                  pipeline_depth=best_plan.pipeline_depth)
         best_g = 0.0
     return SearchResult(plan=best_plan, fmt=best_fmt, gflops=best_g,
                         trials=tuple(trials))

@@ -20,7 +20,7 @@ TRACE_REF = {"$ref": "#/definitions/trace_file"}
 
 
 def test_committed_baseline_validates():
-    with open(ROOT / "benchmarks" / "results" / "BENCH_006.json") as f:
+    with open(ROOT / "benchmarks" / "results" / "BENCH_010.json") as f:
         recs = json.load(f)
     assert recs
     assert validate(recs, BENCH_REF, SCHEMA) == []
@@ -36,7 +36,7 @@ def test_current_bench_json_validates_when_present():
 
 
 def test_schema_rejects_missing_required_column():
-    with open(ROOT / "benchmarks" / "results" / "BENCH_006.json") as f:
+    with open(ROOT / "benchmarks" / "results" / "BENCH_010.json") as f:
         recs = json.load(f)
     rec = dict(next(r for r in recs if r.get("suite") == "batched"))
     del rec["grid_steps_native"]

@@ -28,6 +28,23 @@ def test_docs_cover_the_training_surface():
         assert needle in api, f"docs/api.md lost '{needle}'"
 
 
+def test_docs_cover_the_pipeline_surface():
+    """The pipelined-panel knobs are documented: api.md states the knob
+    contract (+ v4 cache entry), architecture.md has the subsection, and
+    the README maps them to the paper's SME techniques."""
+    api = (ROOT / "docs" / "api.md").read_text()
+    arch = (ROOT / "docs" / "architecture.md").read_text()
+    readme = (ROOT / "README.md").read_text()
+    for needle in ("pipeline_depth", "macro_m", "panel_g_eff",
+                   "default_bn", "currently **4**", "BENCH_010"):
+        assert needle in api, f"docs/api.md lost '{needle}'"
+    for needle in ("Pipelined panels", "pipeline_depth", "macro_m",
+                   "prefetch_overlap", "scratch_bytes", "BENCH_010"):
+        assert needle in arch, f"docs/architecture.md lost '{needle}'"
+    for needle in ("pipeline_depth", "macro_m", "BENCH_010"):
+        assert needle in readme, f"README.md lost '{needle}'"
+
+
 def test_docs_cover_the_observability_surface():
     """observability.md and architecture.md §8 mention the load-bearing
     obs entry points and the jit-safety contract."""

@@ -15,7 +15,7 @@ sys.path.insert(0, str(ROOT / "tools"))
 
 import perf_gate  # noqa: E402
 
-BASELINE = ROOT / "benchmarks" / "results" / "BENCH_006.json"
+BASELINE = ROOT / "benchmarks" / "results" / "BENCH_010.json"
 
 
 def _baseline():
@@ -25,7 +25,7 @@ def _baseline():
 
 def test_baseline_is_committed_and_nonempty():
     recs = _baseline()
-    assert recs, "BENCH_006.json must hold the smoke-suite records"
+    assert recs, "BENCH_010.json must hold the smoke-suite records"
     suites = {r.get("suite") for r in recs}
     assert "fig4_panel" in suites and "batched" in suites
 

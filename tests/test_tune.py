@@ -158,7 +158,9 @@ def test_search_matches_exhaustive_on_tiny_space():
     plans = enumerate_plans(csr, total_workers=4, br_choices=(2, 4),
                             g_choices=(1, 8))
     # budget large enough that pruning keeps every distinct conversion
-    n_convs = len({(p.r_boundary, p.br, p.panel_g) for p in plans})
+    # (the pipeline knobs are part of the conversion identity since v4)
+    n_convs = len({(p.r_boundary, p.br, p.panel_g, p.macro_m,
+                    p.pipeline_depth) for p in plans})
     res = search(csr, n_cols=8, total_workers=4, br_choices=(2, 4),
                  g_choices=(1, 8),
                  budget=SearchBudget(top_k=n_convs, max_trials=n_convs),
@@ -199,7 +201,7 @@ def test_search_warm_start_spans_conversions():
     search(csr, n_cols=8, total_workers=8, measure=measure)
     r_bs = {p.r_boundary for p in measured}
     assert any(0 < r < csr.nrows for r in r_bs), r_bs
-    assert len({(p.r_boundary, p.br, p.panel_g)
+    assert len({(p.r_boundary, p.br, p.panel_g, p.macro_m, p.pipeline_depth)
                 for p in measured}) == len(measured)
 
 

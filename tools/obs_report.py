@@ -163,6 +163,25 @@ def report(records: List[Dict], *, top: int = 10,
                 f"{int(c.get('value', 0)):>8}{extra}")
         out(f"  total dispatches: {n_disp}")
 
+    # Pipelined-kernel gauges: VMEM scratch footprint and the fraction of
+    # grid steps whose B-panel assembly overlaps compute (0.0 = serial).
+    kern = defaultdict(dict)
+    for g in gauges:
+        m = g.get("metric", "")
+        if m in ("kernel.scratch_bytes", "engine.prefetch_overlap"):
+            key = _label_str({k: v for k, v in g.get("labels", {}).items()
+                              if k in ("part", "op")})
+            kern[key][m] = float(g.get("value", 0.0))
+    if kern:
+        out("\nkernel pipeline (per (part, op)):")
+        out(f"  {'labels':<40} {'scratch':>12} {'overlap':>8}")
+        for key, row in sorted(kern.items()):
+            sb = row.get("kernel.scratch_bytes")
+            ov = row.get("engine.prefetch_overlap")
+            sb_s = f"{int(sb):>10}B " if sb is not None else f"{'-':>12}"
+            ov_s = f"{ov:>7.2f} " if ov is not None else f"{'-':>8}"
+            out(f"  {key:<40} {sb_s} {ov_s}")
+
     if hists:
         out("\nlatency histograms:")
         out(f"  {'metric':<40} {'count':>6} {'p50':>10} {'p90':>10} "

@@ -12,7 +12,8 @@ Both files are first validated against ``benchmarks/bench_schema.json``
 pair up on the identity key ``(suite, matrix, dtype, batch, n_cols)``;
 per-metric tolerance bands then apply:
 
-  * **exact**   — ``steps_*`` / ``grid_steps*`` / ``panel_g`` / ``nnz``:
+  * **exact**   — ``steps_*`` / ``grid_steps*`` / ``panel_g`` / ``nnz`` /
+    ``pipeline_depth`` / ``macro_m``:
     structural counts, deterministic functions of the seeded matrices and
     the resolved plan; ANY difference fails (an improvement means the
     baseline is stale — refresh it with ``run.py --update-baseline``);
@@ -45,12 +46,12 @@ sys.path.insert(0, str(ROOT / "src"))
 from repro.perf.schema import load_schema, validate  # noqa: E402
 
 SCHEMA_PATH = ROOT / "benchmarks" / "bench_schema.json"
-DEFAULT_BASELINE = ROOT / "benchmarks" / "results" / "BENCH_006.json"
+DEFAULT_BASELINE = ROOT / "benchmarks" / "results" / "BENCH_010.json"
 DEFAULT_CURRENT = ROOT / "benchmarks" / "results" / "bench.json"
 
 KEY_FIELDS = ("suite", "matrix", "dtype", "batch", "n_cols")
 EXACT_PREFIXES = ("steps_", "grid_steps")
-EXACT_FIELDS = {"panel_g", "nnz"}
+EXACT_FIELDS = {"panel_g", "nnz", "pipeline_depth", "macro_m"}
 NEAR_PREFIX = "step_reduction"
 HIGHER_BETTER_TOKENS = ("gflops", "vs_", "speedup", "reduction")
 
